@@ -1,0 +1,174 @@
+"""§Perf hillclimb driver: re-lower one cell under a named optimization
+variant, re-analyze the HLO, and report the roofline-term deltas vs the
+stored baseline.
+
+MUST set the device count before any jax import (same rule as dryrun.py).
+
+Variants (composable, comma-separated):
+  blockwise_attn   -- cache-conscious attention for train/prefill: stream
+                      decomposer-sized KV blocks instead of materializing
+                      (B, H, S, S) f32 logits (threshold 8192 -> 2048)
+  remat_dots       -- checkpoint policy: save matmul outputs (recompute
+                      element-wise only) instead of full-layer remat
+  serve_tp_weights -- serving keeps weights TP-sharded only (no per-step
+                      FSDP all-gather); costs HBM capacity, removes the
+                      dominant decode collective
+  cache_head_shard -- long-context cache sharded over KV heads instead of
+                      sequence: attention stays shard-local (no
+                      distributed softmax / gather of the cache)
+  cache_seq_shard  -- decode cache sharded over the sequence dim (for archs
+                      whose kv_heads don't divide the model axis: keeps the
+                      cache sharded, collectives move tiny logits instead
+                      of the cache)
+  opt_bf16         -- optimizer moments in bf16 (halves optimizer traffic)
+
+Usage:
+  python -m benchmarks.perf_iter --arch deepseek-coder-33b --shape train_4k \
+      --variants blockwise_attn,remat_dots
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import gzip          # noqa: E402
+import json          # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import TrainConfig, get_model_config, get_shape  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import decode_batch_specs, train_batch_specs  # noqa: E402
+from repro.launch.trainer import make_serve_steps, make_train_step  # noqa: E402
+from repro.optim import adamw_init  # noqa: E402
+from repro.roofline import analyze_hlo, roofline_terms  # noqa: E402
+
+HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DRYRUN = os.path.join(HERE, "experiments", "dryrun")
+PERF = os.path.join(HERE, "experiments", "perf")
+
+
+def run_variant(arch: str, shape_name: str, variants: list,
+                mesh_name: str = "16x16") -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_name != "16x16"))
+    cfg = get_model_config(arch)
+    shape = get_shape(shape_name)
+
+    if "blockwise_attn" in variants:
+        cfg = dataclasses.replace(cfg, attn_blockwise_threshold=2048)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        train = TrainConfig(
+            remat="dots" if "remat_dots" in variants else "full",
+            optimizer_dtype="bfloat16" if "opt_bf16" in variants
+            else "float32",
+        )
+        ts = make_train_step(cfg, shape, mesh, train, jit=True)
+        p_abs = ts.model.abstract_params(jnp.float32)
+        opt_dtype = (jnp.bfloat16 if "opt_bf16" in variants else jnp.float32)
+        opt_abs = jax.eval_shape(
+            lambda p: adamw_init(p, state_dtype=opt_dtype), p_abs)
+        b_abs = train_batch_specs(cfg, shape)
+        lowered = ts.fn.lower(p_abs, opt_abs, b_abs)
+        step_kind = "train_step"
+    else:
+        ss = make_serve_steps(
+            cfg, shape, mesh, jit=True,
+            weights_tp_only="serve_tp_weights" in variants,
+            cache_head_sharded="cache_head_shard" in variants,
+            cache_seq_sharded="cache_seq_shard" in variants,
+            cache_policy="auto" if "auto_cache" in variants else "baseline",
+        )
+        p_abs = ss.model.abstract_params(jnp.float32)
+        if shape.kind == "prefill":
+            b_abs = train_batch_specs(cfg, shape)
+            b_abs.pop("labels", None)
+            lowered = ss.prefill.lower(p_abs, b_abs)
+            step_kind = "prefill_step"
+        else:
+            cache_abs = jax.eval_shape(
+                lambda: ss.model.init_cache(shape.global_batch,
+                                            shape.seq_len, jnp.bfloat16,
+                                            enc_len=shape.seq_len))
+            b_abs = decode_batch_specs(cfg, shape)
+            lowered = ss.decode.lower(p_abs, cache_abs, b_abs)
+            step_kind = "serve_step"
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    hlo_text = compiled.as_text()
+    hlo = analyze_hlo(hlo_text)
+    n_chips = 256 if mesh_name == "16x16" else 512
+    terms = roofline_terms(get_model_config(arch), shape, mesh_name,
+                           step_kind, hlo, n_chips=n_chips)
+    mem = compiled.memory_analysis()
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "variants": variants, "compile_s": round(compile_s, 1),
+        "flops": hlo.flops, "hbm_bytes": hlo.hbm_bytes,
+        "collective_bytes": hlo.collective_bytes,
+        "compute_s": terms.compute_s, "memory_s": terms.memory_s,
+        "collective_s": terms.collective_s,
+        "bottleneck": terms.bottleneck,
+        "bound_s": terms.step_time_bound_s,
+        "mfu_bound": terms.mfu_bound,
+        "roofline_fraction": terms.roofline_fraction,
+        "useful_ratio": terms.useful_ratio,
+        "arg_bytes_per_dev": getattr(mem, "argument_size_in_bytes", None),
+        "temp_bytes_per_dev": getattr(mem, "temp_size_in_bytes", None),
+    }
+
+    os.makedirs(PERF, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{mesh_name}__{'+'.join(variants) or 'base'}"
+    with open(os.path.join(PERF, tag + ".json"), "w") as f:
+        json.dump(result, f, indent=1)
+    with gzip.open(os.path.join(PERF, tag + ".hlo.gz"), "wt") as f:
+        f.write(hlo_text)
+    return result
+
+
+def compare(arch: str, shape_name: str, result: dict,
+            mesh_name: str = "16x16") -> None:
+    base_path = os.path.join(DRYRUN, f"{arch}__{shape_name}__{mesh_name}.json")
+    if not os.path.exists(base_path):
+        print("no baseline found")
+        return
+    with open(base_path) as f:
+        base = json.load(f)
+    br = base["roofline"]
+    bb = max(br["compute_s"], br["memory_s"], br["collective_s"])
+    print(f"\n{arch} x {shape_name} [{'+'.join(result['variants'])}]")
+    print(f"{'term':12s} {'baseline':>12s} {'variant':>12s} {'delta':>8s}")
+    for term, bval in (("compute_s", br["compute_s"]),
+                       ("memory_s", br["memory_s"]),
+                       ("collective_s", br["collective_s"])):
+        v = result[term]
+        d = (v - bval) / bval * 100 if bval else 0.0
+        print(f"{term:12s} {bval * 1e3:10.2f}ms {v * 1e3:10.2f}ms {d:+7.1f}%")
+    print(f"{'bound':12s} {bb * 1e3:10.2f}ms {result['bound_s'] * 1e3:10.2f}ms "
+          f"{(result['bound_s'] - bb) / bb * 100:+7.1f}%")
+    print(f"roofline_fraction: {br.get('roofline_fraction', 0):.4f} -> "
+          f"{result['roofline_fraction']:.4f}   "
+          f"mfu_bound: {br['mfu_bound'] * 100:.2f}% -> "
+          f"{result['mfu_bound'] * 100:.2f}%")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variants", default="")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    variants = [v for v in args.variants.split(",") if v]
+    res = run_variant(args.arch, args.shape, variants, args.mesh)
+    compare(args.arch, args.shape, res, args.mesh)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""§Roofline table generation from the dry-run artifacts.
+
+Reads ``experiments/dryrun/*__16x16.json`` (the single-pod baseline of every
+(arch x shape) cell), renders the roofline table, and nominates the three
+hillclimb cells: worst MFU bound, most collective-bound, and the cell most
+representative of the paper's technique.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_cells(mesh: str = "16x16", dir_: str = DRYRUN_DIR) -> List[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dir_, f"*__{mesh}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    cells.sort(key=lambda c: (c["arch"], SHAPE_ORDER.index(c["shape"])
+                              if c["shape"] in SHAPE_ORDER else 9))
+    return cells
+
+
+def render_table(cells: List[dict]) -> str:
+    lines = [
+        "| arch | shape | step | compute ms | memory ms | collective ms "
+        "| bottleneck | useful (6ND/HLO) | MFU bound |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c.get("status") == "skipped":
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | -- | -- | -- | -- | "
+                f"skipped: {c['reason'][:46]}... | -- | -- |")
+            continue
+        if c.get("status") != "ok":
+            lines.append(f"| {c['arch']} | {c['shape']} | FAILED | | | | | | |")
+            continue
+        r = c["roofline"]
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['step']} "
+            f"| {r['compute_s'] * 1e3:.2f} | {r['memory_s'] * 1e3:.2f} "
+            f"| {r['collective_s'] * 1e3:.2f} | {r['bottleneck']} "
+            f"| {r['useful_ratio']:.2f} | {r['mfu_bound'] * 100:.1f}% |")
+    return "\n".join(lines)
+
+
+def nominate_hillclimb(cells: List[dict]) -> Dict[str, dict]:
+    ok = [c for c in cells if c.get("status") == "ok"]
+    worst_mfu = min(ok, key=lambda c: c["roofline"]["mfu_bound"])
+    coll = max(ok, key=lambda c: (c["roofline"]["collective_s"]
+                                  / max(1e-12, max(
+                                      c["roofline"]["compute_s"],
+                                      c["roofline"]["memory_s"]))))
+    # Most representative of the paper: the big dense training cell whose
+    # bottleneck is the cache-neglectful attention materialization.
+    rep = next((c for c in ok if c["arch"] == "deepseek-coder-33b"
+                and c["shape"] == "train_4k"), ok[0])
+    return {"worst_mfu": worst_mfu, "most_collective": coll,
+            "paper_representative": rep}
+
+
+def summary_csv(cells: List[dict]) -> List[str]:
+    out = []
+    for c in cells:
+        if c.get("status") != "ok":
+            continue
+        r = c["roofline"]
+        bound_us = max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6
+        out.append(
+            f"roofline_{c['arch']}_{c['shape']},{bound_us:.0f},"
+            f"bottleneck={r['bottleneck']};mfu_bound={r['mfu_bound']:.4f};"
+            f"useful={r['useful_ratio']:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    cells = load_cells()
+    print(render_table(cells))
+    print()
+    for k, v in nominate_hillclimb(cells).items():
+        print(f"{k}: {v['arch']} x {v['shape']} "
+              f"(mfu_bound={v['roofline']['mfu_bound'] * 100:.2f}%)")

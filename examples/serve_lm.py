@@ -1,0 +1,17 @@
+"""Batched serving example: prefill a prompt batch, then greedy-decode with
+the family-appropriate KV cache (try ``--arch mixtral-8x7b`` for the
+sliding-window ring cache or ``--arch deepseek-v2-236b`` for the MLA latent
+cache -- reduced-size variants run on this CPU).
+
+Run: ``PYTHONPATH=src python examples/serve_lm.py [--arch zamba2-1.2b]``
+"""
+
+import sys
+
+args = sys.argv[1:] or ["--arch", "llama3.2-1b", "--tokens", "24",
+                        "--batch", "4", "--prompt_len", "48"]
+
+from repro.launch.serve import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main(args))

@@ -1,0 +1,9 @@
+from repro.ckpt.checkpoint import (
+    CheckpointManager,
+    latest_checkpoint,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint",
+           "latest_checkpoint"]

@@ -1,0 +1,53 @@
+"""Cache-Conscious Run-time Decomposition (Paulino & Delgado, 2015) -- core.
+
+The paper's contribution as a composable runtime module:
+
+  * ``hierarchy``    -- platform-independent memory-hierarchy model (§3.1)
+  * ``distribution`` -- the Distribution<T> interface (Table 1)
+  * ``decompose``    -- Algorithm 1 + binary search for np + phi functions (§2.1)
+  * ``schedule``     -- CC / SRRC task clustering (§2.2), LLSC affinity (§2.3)
+  * ``engine``       -- synchronization-free execution engine (§2.4)
+  * ``autotile``     -- the TPU-native realization: decomposer -> Pallas tile
+                        plans (DESIGN.md §2)
+"""
+
+from repro.core.decompose import (
+    Decomposer,
+    DecompositionPlan,
+    NoValidDecomposition,
+    find_optimal_np,
+    make_phi_tpu,
+    phi_conservative,
+    phi_simple,
+    validate_np,
+)
+from repro.core.distribution import (
+    Array1DDistribution,
+    Array2DBlockDistribution,
+    CompositeDomain,
+    Distribution,
+    RowBlockDistribution,
+    StencilDistribution,
+    matmul_domain,
+    matmul_task_grid,
+)
+from repro.core.engine import Engine, RunResult, StageTimes
+from repro.core.hierarchy import (
+    MemoryLevel,
+    paper_system_a,
+    paper_system_i,
+    read_linux_hierarchy,
+    tpu_hierarchy,
+)
+from repro.core.schedule import (
+    cc_range,
+    cc_schedule,
+    cc_worker_tasks,
+    grid_order,
+    lowest_level_shared_cache_groups,
+    srrc_cluster_size,
+    srrc_schedule,
+    srrc_worker_tasks,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

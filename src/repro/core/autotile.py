@@ -1,0 +1,248 @@
+"""TPU-native realization of the paper's cache-conscious decomposition:
+the run-time decomposer chooses Pallas block shapes (the partitions), the
+grid (the task vector) and the traversal order (the schedule).
+
+Mapping (DESIGN.md §2):
+
+  TCL                -> usable VMEM budget of the target chip
+  phi_c line padding -> (sublane x lane) register-tile padding + x2 double
+                        buffering (Pallas pipelines HBM->VMEM block copies)
+  np binary search   -> identical search (Algorithm 1 + §2.1.1), with
+                        phi_tpu as the footprint estimator
+  CC / SRRC          -> grid traversal order: output-stationary row-major
+                        (CC) vs. serpentine operand-reuse order (SRRC)
+
+The *horizontal* (cache-neglectful) baseline of the paper corresponds to not
+tiling at all -- leaving placement to XLA's default lowering. Benchmarks and
+the perf log compare the two, mirroring the paper's §4 study.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+from repro.core.decompose import (
+    NoValidDecomposition,
+    find_optimal_np,
+    make_phi_tpu,
+)
+from repro.core.distribution import RowBlockDistribution, matmul_domain
+from repro.hw.tpu import TPUSpec, chip_spec
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def _round_down(x: int, mult: int) -> int:
+    return max(mult, (x // mult) * mult)
+
+
+def _align_block(size: int, dim: int, mult: int) -> int:
+    """Align a proposed block extent to a hardware multiple, clamped to the
+    (padded) problem dimension."""
+    if dim <= mult:
+        return _round_up(dim, 8)  # tiny dim: pad to sublane granule only
+    return min(_round_up(size, mult), _round_up(dim, mult))
+
+
+# ---------------------------------------------------------------------------
+# Matmul tile planning
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MatmulTilePlan:
+    """Blocked C[m,n] = A[m,k] @ B[k,n] plan for a Pallas kernel."""
+
+    m: int
+    k: int
+    n: int
+    bm: int
+    bk: int
+    bn: int
+    order: str                  # "cc" | "srrc"
+    np: int                     # the paper-search partition count that seeded it
+    est_vmem_bytes: int
+    strategy: str               # "cache_conscious" | "horizontal"
+
+    @property
+    def grid(self) -> Tuple[int, int, int]:
+        # (i over M, j over N, kk over K); kk innermost = output-stationary.
+        return (
+            math.ceil(self.m / self.bm),
+            math.ceil(self.n / self.bn),
+            math.ceil(self.k / self.bk),
+        )
+
+    @property
+    def n_tasks(self) -> int:
+        gi, gj, gk = self.grid
+        return gi * gj * gk
+
+
+def _matmul_vmem_bytes(bm: int, bk: int, bn: int, dtype_bytes: int) -> int:
+    """Working set of one grid step: double-buffered A and B blocks, an f32
+    accumulator (output-stationary), and the output block."""
+    a = bm * bk * dtype_bytes * 2
+    b = bk * bn * dtype_bytes * 2
+    acc = bm * bn * 4
+    out = bm * bn * dtype_bytes * 2
+    return a + b + acc + out
+
+
+def plan_matmul(
+    m: int,
+    k: int,
+    n: int,
+    dtype_bytes: int = 2,
+    spec: Optional[TPUSpec] = None,
+    order: str = "cc",
+    n_workers: int = 1,
+    vmem_fraction: float = 1.0,
+) -> MatmulTilePlan:
+    """Cache-conscious matmul tile plan via the paper's binary search.
+
+    1. Run §2.1.1's search on the Fig. 3 composite domain (A, B, C square
+       block grids) against the chip's usable VMEM with ``phi_tpu``.
+    2. Convert np -> raw block extents and align them to MXU/lane multiples
+       (the phi_c "cache line adjustment", TPU-style).
+    3. Shrink-to-fit if alignment pushed the working set over budget.
+    """
+    spec = spec or chip_spec()
+    budget = int(spec.usable_vmem * vmem_fraction)
+    sub = spec.sublane(dtype_bytes)
+    phi = make_phi_tpu(sublane=sub, lane=spec.lane, buffering=2)
+
+    domain = matmul_domain(m, n, k, element_size=dtype_bytes)
+    try:
+        np_ = find_optimal_np(budget, spec.lane, domain, n_workers, phi)
+    except NoValidDecomposition:
+        # Degenerate problems (a dim smaller than one register tile): a
+        # single minimal block is the only choice.
+        np_ = max(1, n_workers)
+
+    side = max(1, round(math.isqrt(np_)))
+    bm = _align_block(math.ceil(m / side), m, spec.mxu)
+    bk = _align_block(math.ceil(k / side), k, spec.mxu)
+    bn = _align_block(math.ceil(n / side), n, spec.mxu)
+
+    # Shrink-to-fit after alignment (halve the largest extent first; never
+    # drop below one MXU tile / sublane granule).
+    def floor_unit(dim: int) -> int:
+        return spec.mxu if dim > spec.mxu else 8
+
+    while _matmul_vmem_bytes(bm, bk, bn, dtype_bytes) > budget:
+        candidates = [(bm, "m"), (bk, "k"), (bn, "n")]
+        size, which = max(candidates)
+        unit = floor_unit({"m": m, "k": k, "n": n}[which])
+        if size <= unit:
+            break  # cannot shrink further; kernel wrapper will fall back
+        if which == "m":
+            bm = _round_down(size // 2, unit)
+        elif which == "k":
+            bk = _round_down(size // 2, unit)
+        else:
+            bn = _round_down(size // 2, unit)
+
+    return MatmulTilePlan(
+        m=m, k=k, n=n, bm=bm, bk=bk, bn=bn,
+        order=order, np=np_,
+        est_vmem_bytes=_matmul_vmem_bytes(bm, bk, bn, dtype_bytes),
+        strategy="cache_conscious",
+    )
+
+
+def plan_matmul_horizontal(
+    m: int, k: int, n: int, dtype_bytes: int = 2, n_workers: int = 1,
+    spec: Optional[TPUSpec] = None,
+) -> MatmulTilePlan:
+    """The paper's horizontal baseline: one row-slab partition per worker,
+    no cache sizing. (Used by benchmarks; on TPU this is equivalent to XLA's
+    default un-tiled lowering and typically exceeds VMEM.)"""
+    spec = spec or chip_spec()
+    bm = math.ceil(m / max(1, n_workers))
+    return MatmulTilePlan(
+        m=m, k=k, n=n, bm=bm, bk=k, bn=n,
+        order="cc", np=max(1, n_workers),
+        est_vmem_bytes=_matmul_vmem_bytes(bm, k, n, dtype_bytes),
+        strategy="horizontal",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Attention tile planning (flash-style streaming over the KV sequence)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AttentionTilePlan:
+    q_len: int
+    kv_len: int
+    head_dim: int
+    block_q: int
+    block_kv: int
+    np: int
+    est_vmem_bytes: int
+
+    @property
+    def grid(self) -> Tuple[int, int]:
+        return (
+            math.ceil(self.q_len / self.block_q),
+            math.ceil(self.kv_len / self.block_kv),
+        )
+
+
+def _attn_vmem_bytes(bq: int, bkv: int, d: int, dtype_bytes: int) -> int:
+    q = bq * d * dtype_bytes * 2
+    kv = 2 * bkv * d * dtype_bytes * 2          # K and V, double-buffered
+    scores = bq * bkv * 4                        # f32 logits block
+    acc = bq * d * 4 + 2 * bq * 4                # f32 out acc + m/l stats
+    out = bq * d * dtype_bytes * 2
+    return q + kv + scores + acc + out
+
+
+def plan_attention(
+    q_len: int,
+    kv_len: int,
+    head_dim: int,
+    dtype_bytes: int = 2,
+    spec: Optional[TPUSpec] = None,
+    vmem_fraction: float = 1.0,
+) -> AttentionTilePlan:
+    """Decompose the KV sequence so one (K, V) partition plus the Q-side
+    working set fits VMEM -- the paper's decomposition with the KV stream as
+    the domain. block_q is then grown to the largest aligned extent that
+    keeps the step within budget (more MXU work per loaded KV block)."""
+    spec = spec or chip_spec()
+    budget = int(spec.usable_vmem * vmem_fraction)
+    sub = spec.sublane(dtype_bytes)
+    phi = make_phi_tpu(sublane=sub, lane=spec.lane, buffering=2)
+
+    # Stage 1 (paper search): partition K and V (kv_len x d row blocks).
+    kv_domain = [
+        RowBlockDistribution(kv_len, head_dim, dtype_bytes),  # K
+        RowBlockDistribution(kv_len, head_dim, dtype_bytes),  # V
+    ]
+    # Reserve half the budget for the Q-side working set.
+    try:
+        np_ = find_optimal_np(budget // 2, spec.lane, kv_domain, 1, phi)
+    except NoValidDecomposition:
+        np_ = 1
+    block_kv = _align_block(math.ceil(kv_len / np_), kv_len, spec.lane)
+    block_kv = min(block_kv, _round_up(kv_len, sub))
+
+    # Stage 2: largest aligned block_q that fits.
+    bq = _round_up(min(q_len, 2048), sub)
+    while bq > sub and _attn_vmem_bytes(bq, block_kv, head_dim, dtype_bytes) > budget:
+        bq = _round_down(bq // 2, sub)
+    while _attn_vmem_bytes(bq, block_kv, head_dim, dtype_bytes) > budget and block_kv > spec.lane:
+        block_kv = _round_down(block_kv // 2, spec.lane)
+
+    return AttentionTilePlan(
+        q_len=q_len, kv_len=kv_len, head_dim=head_dim,
+        block_q=min(bq, _round_up(q_len, sub)), block_kv=block_kv, np=np_,
+        est_vmem_bytes=_attn_vmem_bytes(bq, block_kv, head_dim, dtype_bytes),
+    )

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataPipeline, SyntheticLMDataset
+
+__all__ = ["DataPipeline", "SyntheticLMDataset"]

@@ -1,0 +1,7 @@
+from repro.ft.resilience import (
+    PreemptionHandler,
+    StepWatchdog,
+    StragglerPolicy,
+)
+
+__all__ = ["PreemptionHandler", "StepWatchdog", "StragglerPolicy"]

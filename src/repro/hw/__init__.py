@@ -1,0 +1,11 @@
+"""Hardware descriptions: TPU chip specs + host CPU detection."""
+
+from repro.hw.tpu import (
+    TPU_V4,
+    TPU_V5E,
+    TPU_V5P,
+    TPUSpec,
+    chip_spec,
+)
+
+__all__ = ["TPUSpec", "TPU_V5E", "TPU_V4", "TPU_V5P", "chip_spec"]

@@ -1,0 +1,94 @@
+"""TPU chip specifications used by the autotiler and the roofline analysis.
+
+The numbers for the *target* chip (TPU v5e) follow the constants mandated for
+this reproduction: 197 TFLOP/s bf16 per chip, 819 GB/s HBM bandwidth,
+~50 GB/s per ICI link. VMEM sizes follow public documentation (order
+128 MiB on recent chips); a configurable ``vmem_reserved_bytes`` models the
+compiler-reserved scratch -- the TPU analogue of the paper's observation
+(§4.4.2) that the *usable* TCL is below the nominal cache size because other
+state competes for it.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+from repro.core.hierarchy import MemoryLevel, tpu_hierarchy
+
+
+@dataclass(frozen=True)
+class TPUSpec:
+    name: str
+    peak_bf16_flops: float          # FLOP/s per chip
+    hbm_bytes: int
+    hbm_bw: float                   # bytes/s
+    vmem_bytes: int                 # per TensorCore
+    vmem_reserved_bytes: int        # compiler scratch / semaphores / spills
+    ici_bw_per_link: float          # bytes/s per link per direction
+    ici_links_per_axis: int         # usable links along one torus axis
+    num_cores: int                  # TensorCores per chip
+    mxu: int = 128                  # systolic array dim
+    sublane_bytes: int = 4 * 8      # granule: 8 sublanes of f32
+    lane: int = 128
+
+    @property
+    def usable_vmem(self) -> int:
+        return self.vmem_bytes - self.vmem_reserved_bytes
+
+    def hierarchy(self) -> MemoryLevel:
+        """This chip in the paper's §3.1 JSON schema (HBM -> VMEM -> VREG)."""
+        return tpu_hierarchy(
+            hbm_bytes=self.hbm_bytes,
+            vmem_bytes=self.usable_vmem,
+            lane_tile_bytes=self.sublane_bytes * self.lane,
+            n_cores=self.num_cores,
+        )
+
+    def sublane(self, dtype_bytes: int) -> int:
+        """Second-minor tile granule: 8 for f32, 16 for bf16, 32 for int8."""
+        return max(8, (4 // max(1, dtype_bytes)) * 8)
+
+
+# Target chip for this reproduction (constants per the assignment).
+TPU_V5E = TPUSpec(
+    name="tpu_v5e",
+    peak_bf16_flops=197e12,
+    hbm_bytes=16 << 30,
+    hbm_bw=819e9,
+    vmem_bytes=128 << 20,
+    vmem_reserved_bytes=32 << 20,
+    ici_bw_per_link=50e9,
+    ici_links_per_axis=1,
+    num_cores=1,
+)
+
+TPU_V4 = TPUSpec(
+    name="tpu_v4",
+    peak_bf16_flops=275e12,
+    hbm_bytes=32 << 30,
+    hbm_bw=1228e9,
+    vmem_bytes=128 << 20,
+    vmem_reserved_bytes=32 << 20,
+    ici_bw_per_link=50e9,
+    ici_links_per_axis=1,
+    num_cores=2,   # megacore: the SRRC "sibling cores sharing an LLC(HBM)"
+)
+
+TPU_V5P = TPUSpec(
+    name="tpu_v5p",
+    peak_bf16_flops=459e12,
+    hbm_bytes=96 << 30,
+    hbm_bw=2765e9,
+    vmem_bytes=128 << 20,
+    vmem_reserved_bytes=32 << 20,
+    ici_bw_per_link=50e9,
+    ici_links_per_axis=3,
+    num_cores=2,
+)
+
+_SPECS = {s.name: s for s in (TPU_V5E, TPU_V4, TPU_V5P)}
+
+
+def chip_spec(name: str = "tpu_v5e", **overrides) -> TPUSpec:
+    spec = _SPECS[name]
+    return replace(spec, **overrides) if overrides else spec

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the perf-critical compute layers, each with a
+pure-jnp oracle in ``ref.py`` and decomposer-driven BlockSpecs.
+
+  * ``matmul_cc``       -- cache-conscious blocked matmul (CC/SRRC orders)
+  * ``flash_attention`` -- streaming-softmax attention, VMEM-sized KV blocks
+  * ``ssd_scan``        -- Mamba2/SSD chunked scan with persistent state
+"""
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.matmul_cc import matmul_cc
+from repro.kernels.ops import attention, matmul, ssd
+from repro.kernels.ssd_scan import ssd_scan
+
+__all__ = ["matmul_cc", "flash_attention", "ssd_scan", "matmul",
+           "attention", "ssd"]

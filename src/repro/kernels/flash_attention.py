@@ -1,0 +1,131 @@
+"""Flash attention Pallas kernel with decomposer-sized blocks.
+
+The KV sequence is streamed in ``block_kv`` partitions chosen by the paper's
+run-time decomposition (``core.autotile.plan_attention``): each grid step's
+working set (Q tile, K/V tiles, f32 score tile, running softmax state) fits
+the VMEM budget. The (m, l, acc) running-softmax state is the task-stream
+carry -- the paper's Fig. 2 worker iterating its partition stream.
+
+Grid: (batch*heads, q_blocks, kv_blocks) with kv innermost (output-
+stationary, CC order). Causal masking is applied per tile from absolute
+positions.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.autotile import AttentionTilePlan, plan_attention
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+               *, scale: float, causal: bool, gkv: int,
+               block_q: int, block_kv: int, q_offset: int, kv_len: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                   # (bq, d)
+    k = k_ref[0]                                   # (bkv, d)
+    v = v_ref[0]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    kpos = kj * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 1)
+    mask = kpos < kv_len                           # padded keys never attend
+    if causal:
+        qpos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 0) + q_offset
+        mask &= kpos <= qpos
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=-1)[:, None]           # (bq, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)[:, None]
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(kj == gkv - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,                  # (B, H, Sq, D)
+    k: jax.Array,                  # (B, H, Sk, D)
+    v: jax.Array,                  # (B, H, Sk, D)
+    causal: bool = True,
+    plan: Optional[AttentionTilePlan] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    if plan is None:
+        plan = plan_attention(sq, sk, d, dtype_bytes=q.dtype.itemsize)
+    bq = max(8, min(plan.block_q, sq))
+    bkv = max(8, min(plan.block_kv, sk))
+
+    gq = -(-sq // bq)
+    gkv = -(-sk // bkv)
+    pq, pk = gq * bq - sq, gkv * bkv - sk
+    # Pad queries at the FRONT so causal alignment (ends aligned) holds,
+    # and keys at the back (masked by causal positions).
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+
+    bh = b * h
+    qp = qp.reshape(bh, gq * bq, d)
+    kp = kp.reshape(bh, gkv * bkv, d)
+    vp = vp.reshape(bh, gkv * bkv, d)
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    scale = 1.0 / math.sqrt(d)
+    q_offset = sk - sq  # align sequence ends (decode-style)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _fa_kernel, scale=scale, causal=causal, gkv=gkv,
+            block_q=bq, block_kv=bkv, q_offset=q_offset, kv_len=sk),
+        grid=(bh, gq, gkv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bhi, qi, kj: (bhi, qi, 0)),
+            pl.BlockSpec((1, bkv, d), lambda bhi, qi, kj: (bhi, kj, 0)),
+            pl.BlockSpec((1, bkv, d), lambda bhi, qi, kj: (bhi, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bhi, qi, kj: (bhi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, gq * bq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),       # running max
+            pltpu.VMEM((bq, 1), jnp.float32),       # running sum
+            pltpu.VMEM((bq, d), jnp.float32),       # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ) if not interpret else None,
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out.reshape(b, h, gq * bq, d)[:, :, :sq]

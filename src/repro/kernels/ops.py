@@ -1,0 +1,41 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On CPU these run the kernels in interpret mode (the Python-level execution
+of the kernel body -- bit-faithful to the block program); on TPU they
+compile via Mosaic. The wrappers take care of planning (via the paper's
+decomposer), padding, and layout.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.matmul_cc import matmul_cc
+from repro.kernels.ssd_scan import ssd_scan
+
+
+@partial(jax.jit, static_argnames=("order", "interpret"))
+def matmul(a: jax.Array, b: jax.Array, order: str = "cc",
+           interpret: Optional[bool] = None) -> jax.Array:
+    """Cache-conscious blocked matmul: C[m,n] = A[m,k] @ B[k,n]."""
+    return matmul_cc(a, b, order=order, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("causal", "interpret"))
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True,
+              interpret: Optional[bool] = None) -> jax.Array:
+    """Flash attention over (B, H, S, D) tensors."""
+    return flash_attention(q, k, v, causal=causal, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+        Cm: jax.Array, chunk: int = 64,
+        interpret: Optional[bool] = None) -> jax.Array:
+    """Chunked selective-state-space scan (Mamba2/SSD)."""
+    return ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def flash_attention_ref(
+    q: jax.Array,        # (B, H, Sq, D)
+    k: jax.Array,        # (B, H, Sk, D)
+    v: jax.Array,        # (B, H, Sk, D)
+    causal: bool = True,
+) -> jax.Array:
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        sq, sk = q.shape[2], k.shape[2]
+        qpos = jnp.arange(sq)[:, None] + (sk - sq)   # align ends
+        mask = jnp.arange(sk)[None, :] <= qpos
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v)
+
+
+def ssd_ref(
+    x: jax.Array,        # (B, S, H, P)
+    dt: jax.Array,       # (B, S, H)
+    A: jax.Array,        # (H,) negative
+    Bm: jax.Array,       # (B, S, N)
+    Cm: jax.Array,       # (B, S, N)
+) -> jax.Array:
+    """Sequential SSD recurrence (the definition, O(S) steps)."""
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                       # (B,H,P),(B,H),(B,N),(B,N)
+        dec = jnp.exp(dtt * A)                      # (B,H)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dtt, xt.astype(jnp.float32),
+                         bt.astype(jnp.float32))
+        state = state * dec[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, ct.astype(jnp.float32))
+        return state, y
+
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    _, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)    # (B, S, H, P)

@@ -1,0 +1,119 @@
+"""Mamba2 / SSD chunked-scan Pallas kernel.
+
+One grid step processes one (batch, chunk) cell: the intra-chunk quadratic
+tile plus the running state update -- the chunk length is the decomposer's
+partition size for the time axis (``mamba2.choose_chunk``), so each task's
+working set (Q x Q decay tile, Q x P inputs, H x P x N state) fits VMEM.
+The state scratch persists across the sequential chunk dimension of the
+grid, exactly the paper's worker iterating its stream of partitions.
+
+Layout: heads are folded into the batch grid dim (one head per step keeps
+the state tile (P, N) MXU-sized).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref,
+                *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)               # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)             # (Q, 1)
+    a = a_ref[0]                                   # (1, 1) negative decay
+    bm = b_ref[0].astype(jnp.float32)              # (Q, N)
+    cm = c_ref[0].astype(jnp.float32)              # (Q, N)
+
+    da = dt * a[0, 0]                              # (Q, 1) log decay
+    cum = jnp.cumsum(da, axis=0)                   # (Q, 1)
+
+    # Intra-chunk: y_i = sum_{j<=i} exp(cum_i - cum_j) (C_i.B_j) dt_j x_j
+    seg = cum - cum.T                              # (Q, Q) = cum_i - cum_j
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(tri, jnp.exp(seg), 0.0)
+    scores = jnp.dot(cm, bm.T, preferred_element_type=jnp.float32)
+    w = scores * L                                 # (Q, Q)
+    xdt = x * dt                                   # (Q, P)
+    y = jnp.dot(w, xdt, preferred_element_type=jnp.float32)
+
+    # Inter-chunk: y_i += exp(cum_i) C_i . S_prev
+    s_prev = state_ref[...]                        # (N, P)
+    y += jnp.dot(cm * jnp.exp(cum), s_prev,
+                 preferred_element_type=jnp.float32)
+
+    # State update: S = exp(cum_last) S_prev + sum_j exp(cum_last - cum_j)
+    #                       dt_j B_j x_j^T
+    total = cum[chunk - 1]
+    decay_out = jnp.exp(total - cum)               # (Q, 1)
+    s_new = s_prev * jnp.exp(total)[0] + jnp.dot(
+        (bm * decay_out * dt).T, x, preferred_element_type=jnp.float32)
+    state_ref[...] = s_new
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(
+    x: jax.Array,       # (B, S, H, P)
+    dt: jax.Array,      # (B, S, H)   post-softplus
+    A: jax.Array,       # (H,)        negative
+    Bm: jax.Array,      # (B, S, N)
+    Cm: jax.Array,      # (B, S, N)
+    chunk: int = 64,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Returns y (B, S, H, P). Heads fold into the grid's parallel dim."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    q = max(8, min(chunk, s))
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // q
+
+    # (B, S, H, P) -> (B*H, S, P); dt -> (B*H, S, 1); B/C broadcast per head.
+    xh = jnp.moveaxis(x, 2, 1).reshape(b * h, sp, p)
+    dth = jnp.moveaxis(dt, 2, 1).reshape(b * h, sp, 1)
+    ah = jnp.tile(A[None, :], (b, 1)).reshape(b * h, 1, 1)
+    bmh = jnp.repeat(Bm, h, axis=0).reshape(b * h, sp, n)
+    cmh = jnp.repeat(Cm, h, axis=0).reshape(b * h, sp, n)
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    y = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=q),
+        grid=(b * h, nc),
+        in_specs=[
+            pl.BlockSpec((1, q, p), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, q, 1), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, 1, 1), lambda i, c: (i, 0, 0)),
+            pl.BlockSpec((1, q, n), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, q, n), lambda i, c: (i, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, p), lambda i, c: (i, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sp, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ) if not interpret else None,
+        interpret=interpret,
+    )(xh, dth, ah, bmh, cmh)
+
+    y = y.reshape(b, h, sp, p)[:, :, :s]
+    return jnp.moveaxis(y, 1, 2)                   # (B, S, H, P)

@@ -1,0 +1,151 @@
+"""Input specifications for every (architecture x shape) cell.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for each model
+input (weak-type-correct, shardable, no device allocation) -- used by the
+dry-run's ``.lower()``; ``make_batch`` materializes real arrays of the same
+structure for smoke tests and the training examples.
+
+Modality frontends are stubs per the assignment: VLM cells receive
+precomputed patch embeddings + M-RoPE position ids; audio cells receive
+precomputed frame embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                      dtype=jnp.bfloat16) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        return {
+            "embeds": _sds((b, s, cfg.d_model), dtype),
+            "positions_3d": _sds((3, b, s), jnp.int32),
+            "labels": _sds((b, s), jnp.int32),
+        }
+    if cfg.family == "enc_dec":
+        return {
+            "enc_embeds": _sds((b, s, cfg.d_model), dtype),
+            "tokens": _sds((b, s), jnp.int32),
+            "labels": _sds((b, s), jnp.int32),
+        }
+    return {
+        "tokens": _sds((b, s), jnp.int32),
+        "labels": _sds((b, s), jnp.int32),
+    }
+
+
+def decode_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b = shape.global_batch
+    out: Dict[str, Any] = {"tokens": _sds((b, 1), jnp.int32)}
+    if cfg.family == "vlm":
+        # Decode generates text tokens; M-RoPE positions for the new token.
+        out["positions_3d"] = _sds((3, b, 1), jnp.int32)
+        out.pop("tokens")
+        out["tokens"] = _sds((b, 1), jnp.int32)
+    return out
+
+
+def batch_logical_axes(cfg: ModelConfig, kind: str) -> Dict[str, Tuple]:
+    """Logical activation axes of each batch input (for in_shardings)."""
+    if kind == "decode":
+        axes = {"tokens": ("batch", None)}
+        if cfg.family == "vlm":
+            axes["positions_3d"] = (None, "batch", None)
+        return axes
+    if cfg.family == "vlm":
+        return {
+            "embeds": ("batch", "seq", "embed"),
+            "positions_3d": (None, "batch", "seq"),
+            "labels": ("batch", "seq"),
+        }
+    if cfg.family == "enc_dec":
+        return {
+            "enc_embeds": ("batch", "seq", "embed"),
+            "tokens": ("batch", "seq"),
+            "labels": ("batch", "seq"),
+        }
+    return {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+
+
+def cache_logical_axes(cfg: ModelConfig, cache: Any, long_context: bool) -> Any:
+    """Logical axes pytree matching ``Model.init_cache`` output.
+
+    The KV-cache sequence dim is sharded over "model" (sequence parallelism)
+    for long-context decode, where the cache dominates memory.
+    """
+    seq_ax = "kv_seq" if long_context else None
+
+    def axes_for(path: Tuple[str, ...], leaf) -> Tuple:
+        name = path[-1]
+        nd = len(leaf.shape)
+        if name in ("k", "v", "cross_k", "cross_v"):
+            # (L, B, S, KV, hd); under sequence parallelism the model axis
+            # shards the sequence dim, so heads must stay unsharded.
+            head_ax = None if long_context else "kv_heads"
+            return ("layers", "batch", seq_ax, head_ax, None)[:nd] if nd == 5 \
+                else (None,) * nd
+        if name in ("ckv", "krope"):
+            return ("layers", "batch", seq_ax, None)
+        if name == "conv":
+            return ("layers", "batch", None, "mlp")
+        if name in ("ssm", "C"):
+            return ("layers", "batch", "state_heads", None, None)
+        if name in ("n", "c", "h", "m"):
+            return (("layers", "batch", "state_heads", None)[:nd])
+        if name in ("len",):
+            return (None,) * nd
+        if name == "pos":
+            return ()
+        return (None,) * nd
+
+    def walk(node, path=()):
+        if isinstance(node, dict):
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        return axes_for(path, node)
+
+    return walk(cache)
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, rng: np.random.Generator,
+               dtype=jnp.bfloat16, kind: str = "train") -> Dict[str, Any]:
+    """Materialize a real batch matching the specs (smoke tests/examples)."""
+    b, s = shape.global_batch, shape.seq_len
+    if kind == "decode":
+        out = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, 1)), jnp.int32)}
+        if cfg.family == "vlm":
+            out["positions_3d"] = jnp.zeros((3, b, 1), jnp.int32)
+        return out
+    if cfg.family == "vlm":
+        return {
+            "embeds": jnp.asarray(
+                rng.standard_normal((b, s, cfg.d_model)), dtype) * 0.02,
+            "positions_3d": jnp.broadcast_to(
+                jnp.arange(s, dtype=jnp.int32)[None, None], (3, b, s)),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
+                                  jnp.int32),
+        }
+    if cfg.family == "enc_dec":
+        return {
+            "enc_embeds": jnp.asarray(
+                rng.standard_normal((b, s, cfg.d_model)), dtype) * 0.02,
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
+                                  jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
+                                  jnp.int32),
+        }
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    labels = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    return {"tokens": tokens, "labels": labels}

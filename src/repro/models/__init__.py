@@ -1,0 +1,10 @@
+from repro.models.model import Model, build_model
+from repro.models.params import (
+    ParamSpec,
+    abstract_params,
+    count_params,
+    init_params,
+    param_axes,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,258 @@
+"""Mamba2 / SSD mixer (arXiv:2405.21060) with cache-conscious chunking.
+
+The SSD duality computes the selective-SSM with a *chunked* algorithm:
+quadratic attention-like work inside chunks of length ``Q`` plus a linear
+state recurrence across chunks. ``Q`` is exactly the paper's partition-size
+knob: the per-chunk working set (Q x Q score tile + Q x P inputs + P x N
+state) must fit the target cache level, and the runtime picks it via the
+decomposer (see ``choose_chunk``). A sequential step form (``ssd_step``)
+serves decode and doubles as the test oracle.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.params import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Chunk selection (the paper's decomposition applied to the SSD time axis)
+# ---------------------------------------------------------------------------
+
+def choose_chunk(seq_len: int, n_heads: int, head_dim: int, state_dim: int,
+                 dtype_bytes: int = 2, spec=None) -> int:
+    """Pick the largest power-of-two chunk whose SSD working set fits the
+    VMEM budget (per the phi_tpu accounting: double-buffered inputs + f32
+    score tile + state)."""
+    from repro.hw import chip_spec
+
+    spec = spec or chip_spec()
+    budget = spec.usable_vmem // 2
+    q = 64
+    while q * 2 <= min(seq_len, 1024):
+        nxt = q * 2
+        work = (
+            nxt * nxt * 4                       # score tile (f32)
+            + 2 * nxt * head_dim * dtype_bytes * 2   # x, dt-scaled x
+            + 2 * nxt * state_dim * dtype_bytes * 2  # B, C rows
+            + head_dim * state_dim * 4          # running state
+        ) * n_heads
+        if work > budget:
+            break
+        q = nxt
+    return q
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def mamba2_param_specs(cfg: ModelConfig, layers: int = 0) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.expand * d
+    h = d_inner // s.head_dim
+    n = s.state_dim
+    conv_ch = d_inner + 2 * n                     # x, B, C convolved (G=1)
+    ls = (layers,) if layers else ()
+    la = ("layers",) if layers else ()
+    return {
+        "wz": ParamSpec(ls + (d, d_inner), la + ("embed", "mlp")),
+        "wx": ParamSpec(ls + (d, d_inner), la + ("embed", "mlp")),
+        "wB": ParamSpec(ls + (d, n), la + ("embed", None)),
+        "wC": ParamSpec(ls + (d, n), la + ("embed", None)),
+        "wdt": ParamSpec(ls + (d, h), la + ("embed", "heads")),
+        "dt_bias": ParamSpec(ls + (h,), la + ("heads",), init="zeros"),
+        "A_log": ParamSpec(ls + (h,), la + ("heads",), init="ones"),
+        "D": ParamSpec(ls + (h,), la + ("heads",), init="ones"),
+        "conv_w": ParamSpec(ls + (s.conv_width, conv_ch), la + (None, "mlp")),
+        "conv_b": ParamSpec(ls + (conv_ch,), la + ("mlp",), init="zeros"),
+        "norm": ParamSpec(ls + (d_inner,), la + ("mlp",), init="ones"),
+        "out": ParamSpec(ls + (d_inner, d), la + ("mlp", "embed"),
+                         scale=1.0 / math.sqrt(2 * max(1, cfg.n_layers))),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                  state: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """x: (B, S, C); w: (W, C) depthwise; state: (B, W-1, C) trailing inputs."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)            # (B, S+W-1, C)
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + xp[:, i: i + x.shape[1]] * w[i].astype(x.dtype)
+    out = out + b.astype(x.dtype)
+    new_state = xp[:, -(width - 1):] if width > 1 else pad
+    return jax.nn.silu(out), new_state
+
+
+# ---------------------------------------------------------------------------
+# SSD: chunked scan (train/prefill) + sequential step (decode / oracle)
+# ---------------------------------------------------------------------------
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """Lower-triangular pairwise sums: out[..., i, j] = sum_{j<r<=i} dA_r."""
+    q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]        # (..., i, j)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,       # (B, S, H, P)
+    dt: jax.Array,      # (B, S, H)  (post-softplus)
+    A: jax.Array,       # (H,)       (negative)
+    Bm: jax.Array,      # (B, S, N)
+    Cm: jax.Array,      # (B, S, N)
+    chunk: int,
+    init_state: Optional[jax.Array] = None,   # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // q
+
+    xc = x.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    Bc = Bm.reshape(b, nc, q, n)
+    Cc = Cm.reshape(b, nc, q, n)
+
+    dA = dtc * A                                       # (B,nc,Q,H) log-decay
+    dA = jnp.moveaxis(dA, -1, 2)                       # (B,nc,H,Q)
+    cum = jnp.cumsum(dA, axis=-1)                      # (B,nc,H,Q)
+
+    # Intra-chunk (attention-like) term.
+    L = jnp.exp(_segsum(dA))                           # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)     # (B,nc,Q,Q)
+    w = scores[:, :, None] * L                         # (B,nc,H,Q,Q)
+    xdt = xc * dtc[..., None]                          # x * dt (B,nc,Q,H,P)
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", w.astype(x.dtype), xdt)
+
+    # Chunk states: S_c = sum_j exp(cum_last - cum_j) dt_j B_j (x_j)^T.
+    decay_out = jnp.exp(cum[..., -1:] - cum)           # (B,nc,H,Q)
+    sdt = (decay_out * jnp.moveaxis(dtc, 2, 3)).astype(x.dtype)  # (B,nc,H,Q)
+    states = jnp.einsum("bchq,bcqn,bcqhp->bchpn", sdt, Bc, xc)
+
+    # Cross-chunk recurrence.
+    chunk_decay = jnp.exp(cum[..., -1])                # (B,nc,H)
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(prev, inp):
+        st, dec = inp                                  # (B,H,P,N), (B,H)
+        out_prev = prev
+        new = prev * dec[..., None, None] + st.astype(jnp.float32)
+        return new, out_prev
+
+    chunk_states = jnp.moveaxis(states, 1, 0)          # (nc,B,H,P,N)
+    chunk_decays = jnp.moveaxis(chunk_decay, 1, 0)     # (nc,B,H)
+    final, prevs = jax.lax.scan(step, s0, (chunk_states, chunk_decays))
+    prevs = jnp.moveaxis(prevs, 0, 1)                  # (B,nc,H,P,N)
+
+    # Inter-chunk contribution: y_off_i = exp(cum_i) C_i . S_prev.
+    decay_in = jnp.exp(cum)                            # (B,nc,H,Q)
+    y_off = jnp.einsum(
+        "bcqn,bchpn,bchq->bcqhp", Cc, prevs.astype(x.dtype),
+        decay_in.astype(x.dtype),
+    )
+
+    y = (y_diag + y_off).reshape(b, nc * q, h, p)[:, :s]
+    return y, final
+
+
+def ssd_step(
+    x: jax.Array,       # (B, H, P) one token
+    dt: jax.Array,      # (B, H)
+    A: jax.Array,       # (H,)
+    Bm: jax.Array,      # (B, N)
+    Cm: jax.Array,      # (B, N)
+    state: jax.Array,   # (B, H, P, N) f32
+) -> Tuple[jax.Array, jax.Array]:
+    dec = jnp.exp(dt * A)                              # (B,H)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, x.astype(jnp.float32),
+                     Bm.astype(jnp.float32))
+    new_state = state * dec[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cm.astype(jnp.float32))
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Full mixer block
+# ---------------------------------------------------------------------------
+
+def mamba2_block(
+    params: dict,
+    hidden: jax.Array,                # (B, S, d)
+    cfg: ModelConfig,
+    cache: Optional[dict] = None,     # {"conv": (B,W-1,C), "ssm": (B,H,P,N)}
+    chunk: Optional[int] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    s_cfg = cfg.ssm
+    b, s, d = hidden.shape
+    d_inner = s_cfg.expand * d
+    h = d_inner // s_cfg.head_dim
+    p = s_cfg.head_dim
+    n = s_cfg.state_dim
+
+    z = hidden @ params["wz"].astype(hidden.dtype)
+    xin = hidden @ params["wx"].astype(hidden.dtype)
+    Bm = hidden @ params["wB"].astype(hidden.dtype)
+    Cm = hidden @ params["wC"].astype(hidden.dtype)
+    dt_raw = hidden @ params["wdt"].astype(hidden.dtype)
+
+    xbc = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = causal_conv1d(xbc, params["conv_w"], params["conv_b"],
+                                  conv_state)
+    xin, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    xh = xin.reshape(b, s, h, p)
+    new_cache = None
+    if cache is not None and s == 1:
+        y, new_state = ssd_step(
+            xh[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0], cache["ssm"]
+        )
+        y = y[:, None]                                  # (B,1,H,P)
+        new_cache = {"conv": new_conv, "ssm": new_state}
+    else:
+        q = chunk or s_cfg.chunk
+        init = cache["ssm"] if cache is not None else None
+        y, final = ssd_chunked(xh, dt.astype(xh.dtype), A.astype(jnp.float32),
+                               Bm, Cm, q, init)
+        if cache is not None:
+            new_cache = {"conv": new_conv, "ssm": final}
+
+    y = y + xh * params["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(b, s, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = y @ params["out"].astype(y.dtype)
+    return out, new_cache

@@ -1,0 +1,130 @@
+"""Mixture-of-Experts FFN with capacity-based scatter dispatch.
+
+Dispatch is scatter/gather based rather than the GShard one-hot einsum: the
+(T, E, C) dispatch tensor contraction costs T*E*C*d FLOPs (over half the
+expert FLOPs for DeepSeek-V2's 160 experts), whereas scatter+gather moves
+each routed token exactly once. Capacity is per batch row so routed tokens
+stay on their row's device under data sharding; expert weights carry an
+"experts" logical axis sharded over the model axis (EP).
+
+Routing: softmax gates -> top-k -> renormalize (Mixtral/DeepSeek style),
+plus the standard load-balancing auxiliary loss.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.params import ParamSpec
+
+
+def moe_param_specs(cfg: ModelConfig, layers: int = 0) -> dict:
+    mo = cfg.moe
+    d = cfg.d_model
+    f = mo.d_ff_expert or cfg.d_ff
+    ls = (layers,) if layers else ()
+    la = ("layers",) if layers else ()
+    specs = {
+        "router": ParamSpec(ls + (d, mo.n_experts), la + ("embed", None)),
+        "wi": ParamSpec(ls + (mo.n_experts, d, f), la + ("experts", "embed", "mlp_expert")),
+        "wg": ParamSpec(ls + (mo.n_experts, d, f), la + ("experts", "embed", "mlp_expert")),
+        "wo": ParamSpec(ls + (mo.n_experts, f, d), la + ("experts", "mlp_expert", "embed"),
+                        scale=1.0 / math.sqrt(2 * max(1, cfg.n_layers))),
+    }
+    if mo.n_shared_experts:
+        fs = f * mo.n_shared_experts
+        specs["shared_wi"] = ParamSpec(ls + (d, fs), la + ("embed", "mlp"))
+        specs["shared_wg"] = ParamSpec(ls + (d, fs), la + ("embed", "mlp"))
+        specs["shared_wo"] = ParamSpec(ls + (fs, d), la + ("mlp", "embed"),
+                                       scale=1.0 / math.sqrt(2 * max(1, cfg.n_layers)))
+    return specs
+
+
+def moe_ffn(
+    params: dict,
+    x: jax.Array,                 # (B, S, d)
+    moe: MoEConfig,
+    capacity_factor: float = 1.25,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output, aux_loss)."""
+    b, s, d = x.shape
+    e, k = moe.n_experts, moe.top_k
+    cap = max(1, math.ceil(s * k * capacity_factor / e))
+
+    gates = jax.nn.softmax(
+        jnp.einsum("bsd,de->bse", x, params["router"].astype(jnp.float32)
+                   .astype(x.dtype)).astype(jnp.float32),
+        axis=-1,
+    )                                                    # (B, S, E) f32
+    top_v, top_i = jax.lax.top_k(gates, k)               # (B, S, K)
+    # Renormalize in f32, combine in the compute dtype. (Measured: the
+    # combine-path psum dtype is unaffected -- XLA keeps f32 reduction
+    # accumulators regardless; see EXPERIMENTS.md §Perf cell 4, H9.)
+    top_v = (top_v / jnp.maximum(top_v.sum(-1, keepdims=True), 1e-9)
+             ).astype(x.dtype)
+
+    # Position of each (token, k) slot within its expert's buffer: exclusive
+    # cumulative count over the flattened (S, K) stream, per batch row.
+    onehot = jax.nn.one_hot(top_i, e, dtype=jnp.int32)   # (B, S, K, E)
+    flat = onehot.reshape(b, s * k, e)
+    pos_in_e = jnp.cumsum(flat, axis=1) - 1              # (B, S*K, E)
+    pos_tok = jnp.sum(pos_in_e * flat, axis=-1).reshape(b, s, k)
+    keep = pos_tok < cap                                  # (B, S, K)
+
+    # Scatter tokens into (B, E, C, d) buffers -- one scatter per k slot so
+    # the token activations are never replicated K times.
+    buf = jnp.zeros((b, e, cap, d), x.dtype)
+    b_idx = jnp.arange(b)[:, None]
+    for kk in range(k):
+        w = keep[:, :, kk].astype(x.dtype)[..., None]    # (B, S, 1)
+        buf = buf.at[b_idx, top_i[:, :, kk], pos_tok[:, :, kk]].add(
+            x * w, mode="drop",
+        )
+
+    # Expert FFN (SwiGLU), e as a batch dim; EP shards it over "model".
+    from repro.dist.sharding import active_rule, constrain
+
+    # TP-expert mode (experts % model != 0, e.g. Mixtral's 8 over 16):
+    # pin the dispatch buffers and expert-hidden activations, else GSPMD
+    # leaves the row-parallel contraction partially sharded and
+    # all-reduces (B, E, C, f)-sized f32 tensors (measured: -43.7% step
+    # bound on mixtral-8x7b train_4k). In EP mode the same constraints
+    # force token buffers onto the expert axis and explode the dispatch
+    # collectives (+434% on deepseek-v2 -- measured, refuted); GSPMD's own
+    # propagation is better there, so constrain nothing.
+    tp_expert_mode = active_rule("experts") is None
+    if tp_expert_mode:
+        buf = constrain(buf, ("batch", "experts", None, None))
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, params["wg"].astype(x.dtype)))
+    h = h * jnp.einsum("becd,edf->becf", buf, params["wi"].astype(x.dtype))
+    if tp_expert_mode:
+        h = constrain(h, ("batch", "experts", None, "mlp"))
+    out_buf = jnp.einsum("becf,efd->becd", h, params["wo"].astype(x.dtype))
+    if tp_expert_mode:
+        out_buf = constrain(out_buf, ("batch", "experts", None, None))
+
+    # Gather-combine.
+    y = jnp.zeros_like(x)
+    for kk in range(k):
+        gathered = out_buf[b_idx, top_i[:, :, kk], pos_tok[:, :, kk]]  # (B,S,d)
+        w = (top_v[:, :, kk]
+             * keep[:, :, kk].astype(x.dtype))[..., None]
+        y = y + gathered * w
+
+    # Shared experts (DeepSeek): always-on dense SwiGLU branch.
+    if "shared_wi" in params:
+        hs = jax.nn.silu(x @ params["shared_wg"].astype(x.dtype)) * (
+            x @ params["shared_wi"].astype(x.dtype)
+        )
+        y = y + hs @ params["shared_wo"].astype(x.dtype)
+
+    # Load-balancing aux loss (Switch/GShard): E * sum_e f_e * p_e.
+    me = jnp.mean(gates, axis=(0, 1))                             # (E,)
+    ce = jnp.mean(onehot.astype(jnp.float32).sum(2), axis=(0, 1))  # (E,)
+    aux = moe.router_aux_weight * e * jnp.sum(me * ce)
+    return y, aux

@@ -1,0 +1,302 @@
+"""xLSTM blocks (arXiv:2405.04517): chunkwise-parallel mLSTM (matrix memory,
+exponential gating, stabilizer) and sequential sLSTM (scalar memory with
+recurrent gate mixing).
+
+The mLSTM training path is chunkwise -- the same cache-conscious structure
+as SSD: a (Q x Q) stabilized intra-chunk tile plus a cross-chunk (C, n, m)
+state scan; the chunk length is the decomposer-chosen partition size. The
+step form (``mlstm_step`` / ``slstm_step``) serves decode and is the oracle
+for the chunkwise path in tests.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.mamba2 import causal_conv1d
+from repro.models.params import ParamSpec
+
+NEG = -1e30
+
+
+def _round128(x: float) -> int:
+    """Projection dims rounded to lane multiples (mesh- and MXU-friendly)."""
+    return max(128, int(-(-x // 128)) * 128)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell: chunkwise parallel + sequential step
+# ---------------------------------------------------------------------------
+
+def mlstm_chunkwise(
+    q: jax.Array,       # (B, S, H, D)
+    k: jax.Array,
+    v: jax.Array,
+    i_pre: jax.Array,   # (B, S, H) input-gate pre-activations
+    f_pre: jax.Array,   # (B, S, H) forget-gate pre-activations
+    chunk: int,
+    state: Optional[Tuple[jax.Array, jax.Array, jax.Array]] = None,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array, jax.Array]]:
+    """Stabilized chunkwise mLSTM. Returns (h (B,S,H,D), (C, n, m))."""
+    b, s, h, d = q.shape
+    qs = min(chunk, s)
+    pad = (-s) % qs
+    if pad:
+        zf = lambda a, val=0.0: jnp.pad(
+            a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2),
+            constant_values=val)
+        q, k, v = zf(q), zf(k), zf(v)
+        i_pre = zf(i_pre, NEG)         # padded tokens contribute nothing
+        f_pre = zf(f_pre, 30.0)        # ~no decay through padding (log_sigmoid~0)
+    nc = q.shape[1] // qs
+    scale = 1.0 / math.sqrt(d)
+
+    def resh(a):
+        return jnp.moveaxis(
+            a.reshape(b, nc, qs, h, *a.shape[3:]), 3, 2
+        )  # (B, nc, H, Q, ...)
+
+    qc, kc, vc = resh(q), resh(k), resh(v)
+    ic = jnp.moveaxis(i_pre.reshape(b, nc, qs, h), 3, 2).astype(jnp.float32)
+    fc = jnp.moveaxis(f_pre.reshape(b, nc, qs, h), 3, 2).astype(jnp.float32)
+
+    logf = jax.nn.log_sigmoid(fc)                       # (B,nc,H,Q)
+    bcum = jnp.cumsum(logf, axis=-1)                    # within-chunk cumsum
+
+    if state is None:
+        C0 = jnp.zeros((b, h, d, d), jnp.float32)
+        n0 = jnp.zeros((b, h, d), jnp.float32)
+        m0 = jnp.full((b, h), NEG, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    tri = jnp.tril(jnp.ones((qs, qs), bool))
+
+    def chunk_step(carry, inp):
+        C, n, m = carry
+        qq, kk, vv, bb, ii = inp    # (B,H,Q,D)x3, (B,H,Q), (B,H,Q)
+
+        # Intra-chunk log weights D_ij = b_i - b_j + i_j  (j <= i).
+        Dlog = bb[..., :, None] - bb[..., None, :] + ii[..., None, :]
+        Dlog = jnp.where(tri, Dlog, NEG)                # (B,H,Q,Q)
+        # Inter-chunk log weight for token i: b_i + m_prev.
+        inter_log = bb + m[..., None]                   # (B,H,Q)
+        m_new = jnp.maximum(Dlog.max(-1), inter_log)    # (B,H,Q)
+        m_new = jnp.maximum(m_new, -m_new * 0 - 50.0)   # floor for stability
+
+        sc = jnp.einsum("bhqd,bhkd->bhqk",
+                        qq.astype(jnp.float32), kk.astype(jnp.float32)) * scale
+        W = jnp.exp(Dlog - m_new[..., None]) * sc       # (B,H,Q,Q)
+        num_intra = jnp.einsum("bhqk,bhkd->bhqd", W, vv.astype(jnp.float32))
+        den_intra = W.sum(-1)                           # (B,H,Q)
+
+        inter_w = jnp.exp(inter_log - m_new)            # (B,H,Q)
+        q32 = qq.astype(jnp.float32) * scale
+        num_inter = jnp.einsum("bhqd,bhde->bhqe", q32, C) * inter_w[..., None]
+        den_inter = jnp.einsum("bhqd,bhd->bhq", q32, n) * inter_w
+
+        num = num_intra + num_inter
+        den = den_intra + den_inter
+        hloc = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+
+        # State update to chunk end.
+        btot = bb[..., -1:]                             # (B,H,1)
+        m_end = jnp.maximum(btot[..., 0] + m, (btot - bb + ii).max(-1))
+        decay_C = jnp.exp(btot[..., 0] + m - m_end)     # (B,H)
+        kw = jnp.exp(btot - bb + ii - m_end[..., None])  # (B,H,Q)
+        C_new = C * decay_C[..., None, None] + jnp.einsum(
+            "bhq,bhqd,bhqe->bhde", kw, kk.astype(jnp.float32),
+            vv.astype(jnp.float32))
+        n_new = n * decay_C[..., None] + jnp.einsum(
+            "bhq,bhqd->bhd", kw, kk.astype(jnp.float32))
+        return (C_new, n_new, m_end), hloc
+
+    inputs = tuple(jnp.moveaxis(a, 1, 0) for a in (qc, kc, vc, bcum, ic))
+    (Cf, nf, mf), hs = jax.lax.scan(chunk_step, (C0, n0, m0), inputs)
+    hs = jnp.moveaxis(hs, 0, 1)                         # (B,nc,H,Q,D)
+    out = jnp.moveaxis(hs, 2, 3).reshape(b, nc * qs, h, d)[:, :s]
+    return out.astype(q.dtype), (Cf, nf, mf)
+
+
+def mlstm_step(
+    q: jax.Array,      # (B, H, D)
+    k: jax.Array,
+    v: jax.Array,
+    i_pre: jax.Array,  # (B, H)
+    f_pre: jax.Array,  # (B, H)
+    state: Tuple[jax.Array, jax.Array, jax.Array],
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array, jax.Array]]:
+    C, n, m = state
+    d = q.shape[-1]
+    scale = 1.0 / math.sqrt(d)
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    i32 = i_pre.astype(jnp.float32)
+    m_new = jnp.maximum(logf + m, i32)
+    fw = jnp.exp(logf + m - m_new)
+    iw = jnp.exp(i32 - m_new)
+    k32, v32 = k.astype(jnp.float32), v.astype(jnp.float32)
+    C_new = C * fw[..., None, None] + iw[..., None, None] * (
+        k32[..., :, None] * v32[..., None, :])
+    n_new = n * fw[..., None] + iw[..., None] * k32
+    q32 = q.astype(jnp.float32) * scale
+    num = jnp.einsum("bhd,bhde->bhe", q32, C_new)
+    den = jnp.einsum("bhd,bhd->bh", q32, n_new)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return h.astype(q.dtype), (C_new, n_new, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM cell (sequential; scalar memory + recurrent gate mixing)
+# ---------------------------------------------------------------------------
+
+def slstm_scan(
+    gx: jax.Array,     # (B, S, H, 4, D) gate pre-activations from input
+    R: jax.Array,      # (H, D, 4, D) block-diagonal recurrent weights
+    state: Tuple[jax.Array, ...],   # (c, n, h, m): each (B, H, D)
+) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
+    def step(carry, g_t):
+        c, n, hprev, m = carry
+        rec = jnp.einsum("bhd,hdge->bhge", hprev, R.astype(jnp.float32))
+        g = g_t.astype(jnp.float32) + rec               # (B,H,4,D)
+        z_pre, i_pre, f_pre, o_pre = (g[:, :, 0], g[:, :, 1],
+                                      g[:, :, 2], g[:, :, 3])
+        logf = jax.nn.log_sigmoid(f_pre)
+        m_new = jnp.maximum(logf + m, i_pre)
+        fw = jnp.exp(logf + m - m_new)
+        iw = jnp.exp(i_pre - m_new)
+        z = jnp.tanh(z_pre)
+        c_new = fw * c + iw * z
+        n_new = fw * n + iw
+        h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    gseq = jnp.moveaxis(gx, 1, 0)                       # (S,B,H,4,D)
+    new_state, hs = jax.lax.scan(step, state, gseq)
+    return jnp.moveaxis(hs, 0, 1), new_state            # (B,S,H,D)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def mlstm_param_specs(cfg: ModelConfig, layers: int = 0) -> dict:
+    x = cfg.xlstm
+    d = cfg.d_model
+    di = _round128(x.mlstm_proj_factor * d)
+    h = cfg.n_heads
+    ls = (layers,) if layers else ()
+    la = ("layers",) if layers else ()
+    return {
+        "w_up": ParamSpec(ls + (d, 2 * di), la + ("embed", "mlp")),
+        "conv_w": ParamSpec(ls + (x.conv_width, di), la + (None, "mlp")),
+        "conv_b": ParamSpec(ls + (di,), la + ("mlp",), init="zeros"),
+        "wq": ParamSpec(ls + (di, di), la + ("embed", "heads")),
+        "wk": ParamSpec(ls + (di, di), la + ("embed", "heads")),
+        "wv": ParamSpec(ls + (di, di), la + ("embed", "heads")),
+        "wif": ParamSpec(ls + (di, 2 * h), la + ("mlp", None)),
+        "out_norm": ParamSpec(ls + (di,), la + ("mlp",), init="ones"),
+        "w_down": ParamSpec(ls + (di, d), la + ("mlp", "embed"),
+                            scale=1.0 / math.sqrt(2 * max(1, cfg.n_layers))),
+    }
+
+
+def mlstm_block(
+    params: dict,
+    hidden: jax.Array,               # (B, S, d)
+    cfg: ModelConfig,
+    cache: Optional[dict] = None,    # {"conv": ..., "C": ..., "n": ..., "m": ...}
+    chunk: int = 256,
+) -> Tuple[jax.Array, Optional[dict]]:
+    x_cfg = cfg.xlstm
+    b, s, d = hidden.shape
+    di = _round128(x_cfg.mlstm_proj_factor * d)
+    h = cfg.n_heads
+    dh = di // h
+
+    up = hidden @ params["w_up"].astype(hidden.dtype)
+    xm, z = jnp.split(up, 2, axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    xc, new_conv = causal_conv1d(xm, params["conv_w"], params["conv_b"],
+                                 conv_state)
+    q = (xc @ params["wq"].astype(xc.dtype)).reshape(b, s, h, dh)
+    k = (xc @ params["wk"].astype(xc.dtype)).reshape(b, s, h, dh)
+    v = (xm @ params["wv"].astype(xm.dtype)).reshape(b, s, h, dh)
+    gif = xm @ params["wif"].astype(xm.dtype)            # (B,S,2H)
+    i_pre, f_pre = jnp.split(gif, 2, axis=-1)
+
+    new_cache = None
+    if cache is not None and s == 1:
+        hout, (C, n, m) = mlstm_step(
+            q[:, 0], k[:, 0], v[:, 0], i_pre[:, 0], f_pre[:, 0],
+            (cache["C"], cache["n"], cache["m"]),
+        )
+        hout = hout[:, None]
+        new_cache = {"conv": new_conv, "C": C, "n": n, "m": m}
+    else:
+        state = None
+        if cache is not None:
+            state = (cache["C"], cache["n"], cache["m"])
+        hout, (C, n, m) = mlstm_chunkwise(q, k, v, i_pre, f_pre, chunk, state)
+        if cache is not None:
+            new_cache = {"conv": new_conv, "C": C, "n": n, "m": m}
+
+    hout = hout.reshape(b, s, di)
+    hout = rms_norm(hout, params["out_norm"], cfg.norm_eps)
+    out = (hout * jax.nn.silu(z)) @ params["w_down"].astype(hout.dtype)
+    return out, new_cache
+
+
+def slstm_param_specs(cfg: ModelConfig, layers: int = 0) -> dict:
+    x = cfg.xlstm
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    dff = _round128(x.slstm_proj_factor * d)
+    ls = (layers,) if layers else ()
+    la = ("layers",) if layers else ()
+    return {
+        "w_gates": ParamSpec(ls + (d, 4 * d), la + ("embed", "mlp")),
+        # True head-count leading dim (4): too small to shard over the
+        # 16-way model axis; replicated (25M params).
+        "r_gates": ParamSpec(ls + (h, dh, 4, dh), la + (None, None, None, None),
+                             scale=0.5),
+        "out_norm": ParamSpec(ls + (d,), la + ("embed",), init="ones"),
+        "w_up_g": ParamSpec(ls + (d, dff), la + ("embed", "mlp")),
+        "w_up_v": ParamSpec(ls + (d, dff), la + ("embed", "mlp")),
+        "w_down": ParamSpec(ls + (dff, d), la + ("mlp", "embed"),
+                            scale=1.0 / math.sqrt(2 * max(1, cfg.n_layers))),
+    }
+
+
+def slstm_block(
+    params: dict,
+    hidden: jax.Array,
+    cfg: ModelConfig,
+    cache: Optional[dict] = None,   # {"c","n","h","m"} each (B,H,dh)
+) -> Tuple[jax.Array, Optional[dict]]:
+    b, s, d = hidden.shape
+    h = cfg.n_heads
+    dh = d // h
+    gx = (hidden @ params["w_gates"].astype(hidden.dtype)).reshape(b, s, 4, h, dh)
+    gx = jnp.moveaxis(gx, 2, 3)                          # (B,S,H,4,dh)
+    if cache is not None:
+        state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    else:
+        zero = jnp.zeros((b, h, dh), jnp.float32)
+        state = (zero, zero, zero, jnp.full((b, h, dh), NEG, jnp.float32))
+    hs, (c, n, hstate, m) = slstm_scan(gx, params["r_gates"], state)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"c": c, "n": n, "h": hstate, "m": m}
+    hs = hs.astype(hidden.dtype).reshape(b, s, d)
+    hs = rms_norm(hs, params["out_norm"], cfg.norm_eps)
+    up = jax.nn.gelu(hs @ params["w_up_g"].astype(hs.dtype)) * (
+        hs @ params["w_up_v"].astype(hs.dtype))
+    out = up @ params["w_down"].astype(up.dtype)
+    return out, new_cache

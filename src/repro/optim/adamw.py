@@ -1,0 +1,86 @@
+"""AdamW with mixed-precision state, global-norm clipping and warmup+cosine
+schedule. Pure pytree functions (no optax dependency); optimizer moments can
+be kept in bf16 (``state_dtype``) -- a distributed-memory optimization that
+roughly halves optimizer HBM at <0.1% quality cost at these scales.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array            # ()
+    mu: PyTree                 # first moment
+    nu: PyTree                 # second moment
+
+
+def adamw_init(params: PyTree, state_dtype=jnp.float32) -> OptState:
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, state_dtype), params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                    nu=jax.tree.map(jnp.copy, zeros))
+
+
+def lr_schedule(cfg: TrainConfig):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / max(1, cfg.warmup_steps), 1.0)
+        prog = jnp.clip(
+            (step - cfg.warmup_steps)
+            / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return cfg.learning_rate * warm * (0.1 + 0.9 * cos)
+    return fn
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, jax.Array]:
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gnorm
+
+
+def adamw_update(
+    params: PyTree,
+    grads: PyTree,
+    state: OptState,
+    cfg: TrainConfig,
+) -> Tuple[PyTree, OptState, Dict[str, jax.Array]]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = lr_schedule(cfg)(step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g32
+        v32 = v.astype(jnp.float32) * b2 + (1 - b2) * jnp.square(g32)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        p32 = p.astype(jnp.float32)
+        upd = mhat / (jnp.sqrt(vhat) + 1e-8) + cfg.weight_decay * p32
+        return ((p32 - lr * upd).astype(p.dtype),
+                m32.astype(m.dtype), v32.astype(v.dtype))
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(step, new_mu, new_nu), {
+        "lr": lr, "grad_norm": gnorm}

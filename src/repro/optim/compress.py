@@ -1,0 +1,70 @@
+"""Gradient compression for cross-pod all-reduce.
+
+Two schemes, applied *before* the data-parallel mean (XLA then all-reduces
+the compressed representation across the slow inter-pod links):
+
+  * ``bf16``    -- cast gradients to bf16 for the reduce (2x wire bytes).
+  * ``int8_ef`` -- per-tensor symmetric int8 quantization with error
+                   feedback: the quantization residual is carried to the
+                   next step (Seide et al. 2014 / 1-bit Adam lineage), which
+                   keeps convergence unaffected to first order (4x wire
+                   bytes).
+
+In SPMD/pjit form we cannot intercept XLA's own all-reduce, so compression
+is expressed as quantize -> (all-reduce happens on the quantized values via
+the psum the caller performs or XLA inserts) -> dequantize; the roofline
+collective term reflects the reduced payload when enabled because the
+reduced tensor *is* the int8/bf16 one.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def ef_state_init(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+
+
+def compress_gradient(
+    grads: PyTree, scheme: str, ef: Optional[PyTree] = None
+) -> Tuple[PyTree, Optional[PyTree], Optional[PyTree]]:
+    """Returns (wire_grads, scales, new_ef)."""
+    if scheme == "none":
+        return grads, None, ef
+    if scheme == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads), None, ef
+    if scheme == "int8_ef":
+        assert ef is not None
+
+        def q(g, e):
+            g32 = g.astype(jnp.float32) + e.astype(jnp.float32)
+            scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+            qi = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+            resid = g32 - qi.astype(jnp.float32) * scale
+            return qi, scale, resid.astype(jnp.bfloat16)
+
+        out = jax.tree.map(q, grads, ef)
+        istuple = lambda x: isinstance(x, tuple)
+        wire = jax.tree.map(lambda t: t[0], out, is_leaf=istuple)
+        scales = jax.tree.map(lambda t: t[1], out, is_leaf=istuple)
+        new_ef = jax.tree.map(lambda t: t[2], out, is_leaf=istuple)
+        return wire, scales, new_ef
+    raise ValueError(f"unknown compression scheme {scheme!r}")
+
+
+def decompress_gradient(wire: PyTree, scheme: str,
+                        scales: Optional[PyTree] = None) -> PyTree:
+    if scheme == "none":
+        return wire
+    if scheme == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.float32), wire)
+    if scheme == "int8_ef":
+        return jax.tree.map(
+            lambda qi, s: qi.astype(jnp.float32) * s, wire, scales)
+    raise ValueError(scheme)

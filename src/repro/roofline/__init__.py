@@ -1,0 +1,4 @@
+from repro.roofline.hlo import HLOSummary, analyze_hlo
+from repro.roofline.report import RooflineTerms, roofline_terms
+
+__all__ = ["HLOSummary", "analyze_hlo", "RooflineTerms", "roofline_terms"]

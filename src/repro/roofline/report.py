@@ -1,0 +1,158 @@
+"""Roofline terms from dry-run artifacts.
+
+Per (arch x shape x mesh), with the mandated v5e constants
+(197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI):
+
+  compute term    = HLO_FLOPs_per_chip / peak
+  memory term     = HLO_bytes_per_chip / HBM_bw
+  collective term = collective_bytes_per_chip / (links x link_bw)
+
+plus MODEL_FLOPS = 6*N*D (train) or 2*N_active*D (decode/prefill) and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.hw import TPUSpec, chip_spec
+from repro.roofline.hlo import HLOSummary
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    step: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    collective_breakdown: Dict[str, float]
+    model_flops_per_chip: float
+    useful_ratio: float                 # MODEL / HLO
+    bottleneck: str
+    step_time_bound_s: float
+    mfu_bound: float                    # model-flops utilization at the bound
+    ideal_bound_s: float = 0.0          # perfect-fusion/sharding bound
+    roofline_fraction: float = 0.0      # ideal_bound / achieved bound
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.step} "
+                f"| {self.compute_s * 1e3:.2f} | {self.memory_s * 1e3:.2f} "
+                f"| {self.collective_s * 1e3:.2f} | {self.bottleneck} "
+                f"| {self.useful_ratio:.2f} | {self.mfu_bound * 100:.1f}% |")
+
+
+def kv_cache_bytes(cfg: ModelConfig, shape: ShapeConfig,
+                   dtype_bytes: int = 2) -> float:
+    """Global KV/state cache bytes for decode shapes."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "mla_moe":
+        per_tok = cfg.mla.kv_lora_rank + cfg.mla.rope_head_dim
+        return cfg.n_layers * b * s * per_tok * dtype_bytes
+    if cfg.family == "hybrid_ssm":
+        ssm = cfg.ssm
+        d_inner = ssm.expand * cfg.d_model
+        h = d_inner // ssm.head_dim
+        state = cfg.n_layers * b * h * ssm.head_dim * ssm.state_dim * 4
+        attn = 0
+        if ssm.attn_every:
+            n_apps = -(-cfg.n_layers // ssm.attn_every)
+            attn = (n_apps * b * s * cfg.n_kv_heads * cfg.head_dim
+                    * 2 * dtype_bytes)
+        return state + attn
+    if cfg.family == "xlstm":
+        from repro.models.xlstm import _round128
+        di = _round128(cfg.xlstm.mlstm_proj_factor * cfg.d_model)
+        dh = di // cfg.n_heads
+        n_m = cfg.n_layers - cfg.n_layers // cfg.xlstm.slstm_every
+        return n_m * b * cfg.n_heads * dh * dh * 4
+    s_kv = min(s, cfg.sliding_window) if cfg.sliding_window else s
+    layers = (cfg.enc_dec.n_decoder_layers if cfg.family == "enc_dec"
+              else cfg.n_layers)
+    cache = layers * b * s_kv * cfg.n_kv_heads * cfg.head_dim * 2 * dtype_bytes
+    if cfg.family == "enc_dec":   # cross K/V over the encoder length
+        cache += (layers * b * s * cfg.n_kv_heads * cfg.head_dim
+                  * 2 * dtype_bytes)
+    return cache
+
+
+def ideal_bytes(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Optimistic global HBM traffic for one step (perfect fusion/sharding):
+    the roofline target the perf loop climbs toward."""
+    n = cfg.param_count()
+    tokens = shape.global_batch * shape.seq_len
+    d, v, L = cfg.d_model, cfg.vocab_size, cfg.n_layers
+    if shape.kind == "train":
+        # fp32 master+m+v read/write (24B) + bf16 weights read fwd/remat/bwd
+        # (6B) + f32 grads write+read (8B).
+        weights = n * 38.0
+        acts = L * tokens * d * 2.0 * 8.0     # block in/outs, fwd+bwd
+        logits = tokens * v * 2.0 * 2.0
+        return weights + acts + logits
+    if shape.kind == "prefill":
+        weights = n * 2.0
+        acts = L * tokens * d * 2.0 * 4.0
+        cache = kv_cache_bytes(cfg, shape)    # written once
+        return weights + acts + cache
+    # decode: all (active) params + the whole cache once per token.
+    active = cfg.active_param_count()
+    return active * 2.0 + kv_cache_bytes(cfg, shape)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Global MODEL_FLOPS for one step: 6*N*D train, 2*N*D per generated /
+    prefilled token (active params for MoE)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence.
+    return 2.0 * n_active * shape.global_batch
+
+
+def roofline_terms(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh_name: str,
+    step: str,
+    hlo: HLOSummary,
+    n_chips: int = 256,
+    spec: Optional[TPUSpec] = None,
+) -> RooflineTerms:
+    spec = spec or chip_spec()
+    # HLO quantities are already per-device (SPMD partitioned module).
+    compute_s = hlo.flops / spec.peak_bf16_flops
+    memory_s = hlo.hbm_bytes / spec.hbm_bw
+    links = spec.ici_links_per_axis
+    collective_s = hlo.total_collective_bytes / (links * spec.ici_bw_per_link)
+
+    mf = model_flops(cfg, shape) / n_chips
+    useful = mf / hlo.flops if hlo.flops else 0.0
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    bound = max(compute_s, memory_s, collective_s)
+    mfu = (mf / spec.peak_bf16_flops) / bound if bound else 0.0
+    ideal = max(mf / spec.peak_bf16_flops,
+                ideal_bytes(cfg, shape) / n_chips / spec.hbm_bw)
+    return RooflineTerms(
+        arch=cfg.arch, shape=shape.name, mesh=mesh_name, step=step,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        flops_per_chip=hlo.flops, hbm_bytes_per_chip=hlo.hbm_bytes,
+        collective_bytes_per_chip=hlo.total_collective_bytes,
+        collective_breakdown=dict(hlo.collective_bytes),
+        model_flops_per_chip=mf, useful_ratio=useful,
+        bottleneck=bottleneck, step_time_bound_s=bound, mfu_bound=mfu,
+        ideal_bound_s=ideal,
+        roofline_fraction=min(1.0, ideal / bound) if bound else 0.0,
+    )

@@ -1,0 +1,135 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward/train step + one decode step on CPU; asserts shapes and no NaNs.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_model_config, get_shape, list_archs
+from repro.launch.specs import make_batch
+from repro.models import build_model
+
+ARCHS = list_archs()
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(0)
+
+
+def _reduced(arch):
+    cfg = get_model_config(arch).reduced()
+    model = build_model(cfg, remat="none")
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_loss_and_grad(arch, rng):
+    cfg, model, params = _reduced(arch)
+    shape = get_shape("train_4k", smoke=True)
+    batch = make_batch(cfg, shape, rng, kind="train")
+
+    def loss_fn(p):
+        loss, metrics = model.loss(p, batch, dtype=jnp.float32)
+        return loss, metrics
+
+    (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    assert jnp.isfinite(loss), (arch, loss)
+    # Loss should be near ln(vocab) for random params.
+    assert 0.5 * np.log(cfg.vocab_size) < float(metrics["nll"]) < 3 * np.log(
+        cfg.vocab_size), (arch, float(metrics["nll"]))
+    # All grads finite, at least one nonzero.
+    leaves = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in leaves), arch
+    assert any(float(jnp.max(jnp.abs(g))) > 0 for g in leaves), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_logits_shape(arch, rng):
+    cfg, model, params = _reduced(arch)
+    shape = get_shape("train_4k", smoke=True)
+    batch = make_batch(cfg, shape, rng, kind="train")
+    logits, aux = model.forward(params, batch, dtype=jnp.float32)
+    assert logits.shape == (shape.global_batch, shape.seq_len, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_then_decode(arch, rng):
+    cfg, model, params = _reduced(arch)
+    shape = get_shape("decode_32k", smoke=True)
+    max_len = shape.seq_len + 4
+    prompt = make_batch(cfg, shape, rng, kind="train")
+    logits0, cache = model.prefill(params, prompt, max_len, dtype=jnp.float32)
+    assert logits0.shape == (shape.global_batch, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits0))), arch
+
+    step = make_batch(cfg, shape, rng, kind="decode")
+    for _ in range(2):
+        logits, cache = model.decode_step(params, cache, step,
+                                          dtype=jnp.float32)
+        assert logits.shape == (shape.global_batch, cfg.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(logits))), arch
+    assert int(cache["pos"]) == shape.seq_len + 2
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "mixtral-8x7b", "zamba2-1.2b",
+                                  "xlstm-1.3b", "deepseek-v2-236b"])
+def test_decode_matches_forward(arch, rng):
+    """Teacher-forced decode must reproduce the training forward's logits --
+    the cache path and the parallel path are the same function."""
+    cfg, model, params = _reduced(arch)
+    if cfg.moe is not None:
+        # No-drop capacity: token dropping is a train-time semantic; the
+        # teacher-forced equivalence only holds without drops.
+        model.capacity_factor = float(cfg.moe.n_experts)
+    b, s = 2, 12
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    batch = {"tokens": tokens, "labels": tokens}
+    logits_par, _ = model.forward(params, batch, dtype=jnp.float32)
+
+    # Prefill 1 token, then decode the rest step by step.
+    cache = None
+    logits_steps = []
+    first = {"tokens": tokens[:, :1], "labels": tokens[:, :1]}
+    lg, cache = model.prefill(params, first, max_len=s + 1, dtype=jnp.float32)
+    logits_steps.append(lg)
+    for t in range(1, s):
+        lg, cache = model.decode_step(
+            params, cache, {"tokens": tokens[:, t:t + 1]}, dtype=jnp.float32)
+        logits_steps.append(lg)
+    logits_dec = jnp.stack(logits_steps, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(logits_par), np.asarray(logits_dec), rtol=2e-2, atol=2e-2)
+
+
+def test_sliding_window_ring_cache(rng):
+    """Mixtral-style SWA: ring cache (size=window) must agree with a full
+    cache when the context exceeds the window."""
+    cfg = get_model_config("mixtral-8x7b").reduced()
+    model = build_model(cfg, remat="none")
+    model.capacity_factor = float(cfg.moe.n_experts)   # no-drop (see above)
+    params = model.init(jax.random.PRNGKey(1))
+    w = cfg.sliding_window
+    b, s = 1, w + 8   # exceed the window
+
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    logits_par, _ = model.forward(
+        params, {"tokens": tokens, "labels": tokens}, dtype=jnp.float32)
+
+    lg, cache = model.prefill(params, {"tokens": tokens[:, :1]},
+                              max_len=s + 1, dtype=jnp.float32)
+    outs = [lg]
+    for t in range(1, s):
+        lg, cache = model.decode_step(
+            params, cache, {"tokens": tokens[:, t:t + 1]}, dtype=jnp.float32)
+        outs.append(lg)
+    # Ring cache buffer never exceeds the window.
+    assert cache["layers"]["k"].shape[2] <= w + 1
+    logits_dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(logits_par), np.asarray(logits_dec), rtol=2e-2, atol=2e-2)

@@ -1,0 +1,84 @@
+"""Autotile planner tests: plans must fit the VMEM budget, be hardware
+aligned, and degrade gracefully on degenerate shapes."""
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.autotile import (
+    _attn_vmem_bytes,
+    _matmul_vmem_bytes,
+    plan_attention,
+    plan_matmul,
+    plan_matmul_horizontal,
+)
+from repro.hw import chip_spec
+
+
+SPEC = chip_spec("tpu_v5e")
+
+
+class TestMatmulPlan:
+    def test_typical_llm_matmul_fits(self):
+        p = plan_matmul(4096, 4096, 4096, dtype_bytes=2, spec=SPEC)
+        assert p.est_vmem_bytes <= SPEC.usable_vmem
+        assert p.bm % 8 == 0 and p.bn % 8 == 0 and p.bk % 8 == 0
+
+    def test_mxu_alignment_for_large_dims(self):
+        p = plan_matmul(8192, 8192, 8192, dtype_bytes=2, spec=SPEC)
+        assert p.bm % 128 == 0 and p.bk % 128 == 0 and p.bn % 128 == 0
+
+    def test_grid_covers_problem(self):
+        p = plan_matmul(1000, 3000, 500, dtype_bytes=4, spec=SPEC)
+        gi, gj, gk = p.grid
+        assert gi * p.bm >= p.m and gj * p.bn >= p.n and gk * p.bk >= p.k
+
+    def test_horizontal_is_one_slab_per_worker(self):
+        p = plan_matmul_horizontal(4096, 4096, 4096, n_workers=8)
+        assert p.bm == 512 and p.bk == 4096 and p.bn == 4096
+        assert p.strategy == "horizontal"
+
+    def test_cache_conscious_beats_horizontal_footprint(self):
+        cc = plan_matmul(8192, 8192, 8192, dtype_bytes=2, spec=SPEC)
+        hz = plan_matmul_horizontal(8192, 8192, 8192, dtype_bytes=2, n_workers=8)
+        assert cc.est_vmem_bytes <= SPEC.usable_vmem < hz.est_vmem_bytes
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    m=st.integers(min_value=8, max_value=16384),
+    k=st.integers(min_value=8, max_value=16384),
+    n=st.integers(min_value=8, max_value=16384),
+    dtype_bytes=st.sampled_from([1, 2, 4]),
+)
+def test_matmul_plan_always_fits_or_is_minimal(m, k, n, dtype_bytes):
+    p = plan_matmul(m, k, n, dtype_bytes=dtype_bytes, spec=SPEC)
+    fits = p.est_vmem_bytes <= SPEC.usable_vmem
+    minimal = p.bm <= 128 and p.bk <= 128 and p.bn <= 128
+    assert fits or minimal
+    # Blocks never exceed the padded problem dims.
+    assert p.bm <= ((m + 127) // 128) * 128 + 128
+    assert p.n_tasks >= 1
+
+
+class TestAttentionPlan:
+    def test_long_context_blocks_fit(self):
+        p = plan_attention(32768, 32768, 128, dtype_bytes=2, spec=SPEC)
+        assert _attn_vmem_bytes(p.block_q, p.block_kv, 128, 2) <= SPEC.usable_vmem
+        assert p.block_q % 8 == 0
+        assert p.block_kv % 8 == 0
+
+    def test_decode_shape(self):
+        # q_len=1 decode against a long cache.
+        p = plan_attention(1, 524288, 64, dtype_bytes=2, spec=SPEC)
+        assert p.block_q >= 1
+        assert p.block_kv <= 524288
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        q=st.integers(min_value=1, max_value=65536),
+        kv=st.integers(min_value=1, max_value=65536),
+        d=st.sampled_from([64, 128, 256]),
+    )
+    def test_plan_fits_budget(self, q, kv, d):
+        p = plan_attention(q, kv, d, dtype_bytes=2, spec=SPEC)
+        assert _attn_vmem_bytes(p.block_q, p.block_kv, d, 2) <= SPEC.usable_vmem

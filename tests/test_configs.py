@@ -1,0 +1,114 @@
+"""Config system tests: registry completeness, published-number spot checks,
+CLI overrides, reduced-config invariants, and the grouped-GQA equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import (
+    RunConfig,
+    SHAPES,
+    TrainConfig,
+    apply_overrides,
+    get_model_config,
+    get_shape,
+    list_archs,
+    parse_cli,
+)
+
+ASSIGNED = [
+    "zamba2-1.2b", "qwen2-0.5b", "deepseek-coder-33b", "stablelm-1.6b",
+    "llama3.2-1b", "qwen2-vl-7b", "mixtral-8x7b", "deepseek-v2-236b",
+    "xlstm-1.3b", "whisper-large-v3",
+]
+
+
+class TestRegistry:
+    def test_all_assigned_archs_registered(self):
+        assert sorted(list_archs()) == sorted(ASSIGNED)
+
+    def test_published_numbers(self):
+        c = get_model_config("mixtral-8x7b")
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (32, 4096, 32, 8)
+        assert c.moe.n_experts == 8 and c.moe.top_k == 2
+        assert c.sliding_window == 4096
+        # Param count within 2% of the published 46.7B / 12.9B active.
+        assert abs(c.param_count() - 46.7e9) / 46.7e9 < 0.02
+        assert abs(c.active_param_count() - 12.9e9) / 12.9e9 < 0.02
+
+        d = get_model_config("deepseek-v2-236b")
+        assert d.mla.kv_lora_rank == 512 and d.moe.n_experts == 160
+        assert abs(d.param_count() - 236e9) / 236e9 < 0.03
+
+        z = get_model_config("zamba2-1.2b")
+        assert z.ssm.state_dim == 64 and z.ssm.attn_every == 6
+
+    def test_four_shapes(self):
+        assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                               "long_500k"}
+        assert SHAPES["train_4k"].global_batch == 256
+        assert SHAPES["long_500k"].seq_len == 524288
+        assert get_shape("decode_32k").kind == "decode"
+
+    def test_unknown_arch_raises(self):
+        with pytest.raises(KeyError):
+            get_model_config("gpt-17")
+
+    def test_subquadratic_flags(self):
+        runs = {a for a in ASSIGNED
+                if get_model_config(a).is_subquadratic}
+        assert runs == {"zamba2-1.2b", "xlstm-1.3b", "mixtral-8x7b"}
+
+
+class TestCLI:
+    def test_parse_and_apply_overrides(self):
+        overrides, rest = parse_cli(
+            ["--train.learning_rate", "1e-4", "--shape.seq_len=128", "pos"])
+        assert rest == ["pos"]
+        run = RunConfig(model=get_model_config("qwen2-0.5b"),
+                        shape=get_shape("train_4k"))
+        run = apply_overrides(run, overrides)
+        assert run.train.learning_rate == pytest.approx(1e-4)
+        assert run.shape.seq_len == 128
+        # Untouched fields survive.
+        assert run.model.d_model == 896
+
+    def test_reduced_configs_stay_in_family(self):
+        for a in ASSIGNED:
+            c = get_model_config(a)
+            r = c.reduced()
+            assert r.family == c.family
+            assert r.d_model <= 64 and r.vocab_size <= 256
+            if c.moe:
+                assert r.moe.n_experts == 4
+            if c.ssm:
+                assert r.ssm.attn_every <= 2
+
+
+class TestGroupedAttention:
+    def test_grouped_equals_repeat_full(self):
+        """grouped_attention must be numerically identical to
+        repeat_kv + full_attention (the cell-2 optimization's safety net)."""
+        from repro.models.layers import (
+            full_attention,
+            grouped_attention,
+            repeat_kv,
+        )
+
+        key = jax.random.PRNGKey(0)
+        b, sq, sk, h, kv, d = 2, 1, 64, 8, 2, 16
+        q = jax.random.normal(key, (b, sq, h, d), jnp.float32)
+        k = jax.random.normal(jax.random.fold_in(key, 1), (b, sk, kv, d),
+                              jnp.float32)
+        v = jax.random.normal(jax.random.fold_in(key, 2), (b, sk, kv, d),
+                              jnp.float32)
+        q_pos = jnp.asarray([sk - 1])
+        k_pos = jnp.arange(sk)
+        ref = full_attention(q, repeat_kv(k, h // kv), repeat_kv(v, h // kv),
+                             q_pos, k_pos, causal=True,
+                             kv_len=jnp.asarray(sk))
+        out = grouped_attention(q, k, v, q_pos, k_pos, causal=True,
+                                kv_len=jnp.asarray(sk))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)

@@ -1,0 +1,207 @@
+"""Decomposition tests, anchored to the paper's own worked numbers (§2.1.2,
+§2.2, §4.4.4) plus hypothesis property tests of the search invariants."""
+
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    Array1DDistribution,
+    Array2DBlockDistribution,
+    Decomposer,
+    NoValidDecomposition,
+    StencilDistribution,
+    find_optimal_np,
+    matmul_domain,
+    matmul_task_grid,
+    paper_system_a,
+    phi_conservative,
+    phi_simple,
+    validate_np,
+)
+
+KB = 1024
+
+
+# ---------------------------------------------------------------------------
+# Paper §2.1.2 worked example: 1024x1024 int32 matmul, TCL = 64 KiB, np = 256.
+# ---------------------------------------------------------------------------
+
+class TestPaperWorkedExample:
+    def setup_method(self):
+        self.domain = matmul_domain(1024, 1024, 1024, element_size=4)
+
+    def test_phi_s_is_49152(self):
+        total = sum(phi_simple(64, d, 256) for d in self.domain)
+        assert total == 49152  # (1024/16)^2 * 3 matrices * 4 bytes
+
+    def test_phi_c_is_98304(self):
+        total = sum(phi_conservative(64, d, 256) for d in self.domain)
+        assert total == 98304  # 64 * 64 * 3 * 4 * (1 + 1)
+
+    def test_np256_valid_under_phi_s_invalid_under_phi_c(self):
+        assert validate_np(64 * KB, 64, list(self.domain), 256, phi_simple) == 1
+        assert validate_np(64 * KB, 64, list(self.domain), 256, phi_conservative) == 0
+
+    def test_blocked_matmul_task_count_fig3(self):
+        # 16x16 blocks -> each A block pairs with 16 B blocks -> 16^3 tasks.
+        assert len(matmul_task_grid(256)) == 4096
+
+
+# ---------------------------------------------------------------------------
+# Paper §4.4.4 breakdown: MatMult N=2000, TCL=128 KiB, 8 workers -> 8000 tasks
+# (np=400 blocks -> 20^3 tasks, 1000 per worker).
+# ---------------------------------------------------------------------------
+
+class TestPaperBreakdownAnchor:
+    def test_matmult_2000_tcl128k_8workers(self):
+        domain = matmul_domain(2000, 2000, 2000, element_size=4)
+        np_ = find_optimal_np(128 * KB, 64, domain, n_workers=8, phi=phi_simple)
+        assert np_ == 400
+        tasks = matmul_task_grid(np_)
+        assert len(tasks) == 8000
+        per_worker = len(tasks) // 8
+        assert per_worker == 1000
+
+    def test_partition_fits_tcl(self):
+        domain = matmul_domain(2000, 2000, 2000, element_size=4)
+        np_ = find_optimal_np(128 * KB, 64, domain, n_workers=8, phi=phi_simple)
+        total = sum(phi_simple(64, d, np_) for d in domain)
+        assert total <= 128 * KB
+
+    def test_smaller_np_does_not_fit(self):
+        # np=400 is the smallest structurally-valid np that fits: the next
+        # square below it (361) must overflow the TCL.
+        domain = matmul_domain(2000, 2000, 2000, element_size=4)
+        assert validate_np(128 * KB, 64, list(domain), 361, phi_simple) == 0
+
+
+# ---------------------------------------------------------------------------
+# Search-behaviour unit tests
+# ---------------------------------------------------------------------------
+
+class TestSearch:
+    def test_lower_bound_is_n_workers(self):
+        # A tiny domain with a huge TCL: np must still be >= nWorkers.
+        d = Array1DDistribution(length=10_000, element_size=4)
+        np_ = find_optimal_np(1 << 30, 64, [d], n_workers=8)
+        assert np_ >= 8
+
+    def test_no_solution_raises(self):
+        # 3 elements cannot be split into >= 4 partitions.
+        d = Array1DDistribution(length=3, element_size=4)
+        with pytest.raises(NoValidDecomposition):
+            find_optimal_np(1, 64, [d], n_workers=4)
+
+    def test_perfect_square_constraint_respected(self):
+        d = Array2DBlockDistribution(1024, 1024, 4)
+        np_ = find_optimal_np(64 * KB, 64, [d], n_workers=8)
+        r = round(math.isqrt(np_))
+        assert r * r == np_
+        assert d.validate(np_) == 1
+
+    def test_stencil_min_side(self):
+        # Radius-1 stencil: partitions must be >= 3x3 (paper §2.1).
+        d = StencilDistribution(12, 12, 4, halo=1)
+        assert d.validate(16) == 1    # 3x3 blocks
+        assert d.validate(25) == -1   # 12//5=2 < 3 -> hopeless for all larger
+        np_ = find_optimal_np(1 << 20, 64, [d], n_workers=1)
+        assert np_ in (1, 4, 9, 16)
+
+    def test_horizontal_strategy_np_equals_workers(self):
+        dec = Decomposer(paper_system_a(), tcl="L1", strategy="horizontal")
+        d = Array1DDistribution(length=1 << 20, element_size=4)
+        plan = dec.decompose([d], n_workers=8)
+        assert plan.np == 8
+
+    def test_horizontal_respects_structural_validity(self):
+        dec = Decomposer(paper_system_a(), tcl="L1", strategy="horizontal")
+        d = Array2DBlockDistribution(1024, 1024, 4)
+        plan = dec.decompose([d], n_workers=8)
+        assert plan.np == 9  # next perfect square >= 8
+
+
+# ---------------------------------------------------------------------------
+# Property tests
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(
+    length=st.integers(min_value=64, max_value=1 << 20),
+    elem=st.sampled_from([1, 2, 4, 8]),
+    workers=st.integers(min_value=1, max_value=64),
+    tcl_kb=st.sampled_from([16, 32, 64, 128, 512]),
+)
+def test_found_np_is_valid_and_minimal_1d(length, elem, workers, tcl_kb):
+    d = Array1DDistribution(length=length, element_size=elem)
+    try:
+        np_ = find_optimal_np(tcl_kb * KB, 64, [d], n_workers=workers)
+    except NoValidDecomposition:
+        # Only legitimate when even np=length (one element each) overflows.
+        assert validate_np(tcl_kb * KB, 64, [d], length, phi_simple) != 1
+        return
+    assert np_ >= workers
+    assert validate_np(tcl_kb * KB, 64, [d], np_, phi_simple) == 1
+    if np_ > workers:
+        # Minimality: the previous admissible value must not fit.
+        assert validate_np(tcl_kb * KB, 64, [d], np_ - 1, phi_simple) != 1
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    n=st.integers(min_value=64, max_value=4096),
+    workers=st.integers(min_value=1, max_value=16),
+    tcl_kb=st.sampled_from([32, 64, 128, 256]),
+)
+def test_found_np_is_valid_and_minimal_matmul(n, workers, tcl_kb):
+    domain = matmul_domain(n, n, n, element_size=4)
+    try:
+        np_ = find_optimal_np(tcl_kb * KB, 64, domain, n_workers=workers)
+    except NoValidDecomposition:
+        return
+    assert np_ >= workers
+    assert validate_np(tcl_kb * KB, 64, list(domain), np_, phi_simple) == 1
+    # Minimality among perfect squares >= workers.
+    side = round(math.isqrt(np_))
+    prev = (side - 1) ** 2
+    if prev >= workers and prev > 0:
+        assert validate_np(tcl_kb * KB, 64, list(domain), prev, phi_simple) != 1
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    rows=st.integers(min_value=16, max_value=4096),
+    cols=st.integers(min_value=16, max_value=4096),
+    np_=st.integers(min_value=1, max_value=1024),
+)
+def test_partition_regions_cover_domain(rows, cols, np_):
+    d = Array2DBlockDistribution(rows, cols, 4)
+    if d.validate(np_) != 1:
+        return
+    regions = d.partition(np_)
+    assert len(regions) == np_
+    covered = sum(
+        (rs.stop - rs.start) * (cs.stop - cs.start) for rs, cs in regions
+    )
+    assert covered == rows * cols
+    # Imbalance of at most one indivisible row/col strip (paper §2.1).
+    sizes = [(rs.stop - rs.start) for rs, cs in regions]
+    assert max(sizes) - min(sizes) <= 1
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    length=st.integers(min_value=10, max_value=100_000),
+    np_=st.integers(min_value=1, max_value=256),
+)
+def test_1d_partition_disjoint_cover(length, np_):
+    d = Array1DDistribution(length=length, element_size=4)
+    if d.validate(np_) != 1:
+        return
+    regions = d.partition(np_)
+    seen = []
+    for (sl,) in regions:
+        seen.extend(range(sl.start, sl.stop))
+    assert seen == list(range(length))

@@ -1,0 +1,115 @@
+"""End-to-end engine tests: the paper's decompose->schedule->execute->reduce
+pipeline computing real results (blocked matmul, stencil) vs. NumPy oracles."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Array1DDistribution,
+    Engine,
+    StencilDistribution,
+    matmul_domain,
+    matmul_task_grid,
+    paper_system_a,
+)
+
+
+def blocked_matmul(engine: Engine, A: np.ndarray, B: np.ndarray) -> tuple:
+    """The paper's Fig. 3 computation expressed over the engine."""
+    n, k = A.shape
+    k2, m = B.shape
+    assert k == k2
+    domain = matmul_domain(n, m, k, element_size=A.dtype.itemsize)
+    C = np.zeros((n, m), dtype=A.dtype)
+
+    def make_tasks(plan):
+        a_regions, b_regions, c_regions = plan.regions
+        side = round(np.sqrt(plan.np))
+        tasks = []
+        for (i, j, kk) in matmul_task_grid(plan.np):
+            a_reg = a_regions[i * side + kk]     # A[i, kk] block
+            b_reg = b_regions[kk * side + j]     # B[kk, j] block
+            c_reg = c_regions[i * side + j]      # C[i, j] block
+            tasks.append((a_reg, b_reg, c_reg))
+        return tasks
+
+    def compute(task):
+        a_reg, b_reg, c_reg = task
+        # K-partial products accumulate into disjoint C blocks per (i,j);
+        # tasks sharing (i,j) are contiguous in k under CC order, and += on
+        # distinct (i,j) blocks from different workers is disjoint under the
+        # task->worker maps used here (single-threaded in tests).
+        C[c_reg] += A[a_reg] @ B[b_reg]
+        return None
+
+    res = engine.run(domain, compute, make_tasks=make_tasks)
+    return C, res
+
+
+@pytest.mark.parametrize("schedule", ["cc", "srrc"])
+@pytest.mark.parametrize("strategy", ["cache_conscious", "horizontal"])
+def test_blocked_matmul_matches_numpy(schedule, strategy):
+    rng = np.random.default_rng(0)
+    A = rng.standard_normal((96, 96)).astype(np.float32)
+    B = rng.standard_normal((96, 96)).astype(np.float32)
+    eng = Engine(
+        paper_system_a(), n_workers=4, tcl=16 * 1024,
+        schedule=schedule, strategy=strategy, parallel=False,
+    )
+    C, res = blocked_matmul(eng, A, B)
+    np.testing.assert_allclose(C, A @ B, rtol=1e-5, atol=1e-5)
+    if strategy == "cache_conscious":
+        assert res.np > 4  # more partitions than workers
+    assert res.times.total > 0
+
+
+def test_stencil_with_engine():
+    """SOR-like 5-point sweep over halo-extended partitions vs. oracle."""
+    rng = np.random.default_rng(1)
+    grid = rng.standard_normal((64, 64)).astype(np.float32)
+    d = StencilDistribution(64, 64, 4, halo=1)
+    eng = Engine(paper_system_a(), n_workers=4, tcl=8 * 1024, parallel=False)
+    out = np.zeros_like(grid)
+
+    def compute(task):
+        (region,) = task
+        rs, cs = region
+        ext = d.halo_region(region)
+        sub = grid[ext]
+        # Jacobi 5-point average on the interior of the halo block.
+        core = np.zeros((rs.stop - rs.start, cs.stop - cs.start), np.float32)
+        r0 = rs.start - ext[0].start
+        c0 = cs.start - ext[1].start
+        for (dr, dc) in ((0, 0), (1, 0), (-1, 0), (0, 1), (0, -1)):
+            rr = slice(r0 + dr, r0 + dr + core.shape[0])
+            cc = slice(c0 + dc, c0 + dc + core.shape[1])
+            # Clip reads that fall outside the extended block (true border).
+            pad = np.pad(sub, 1, mode="edge")
+            core += pad[rr.start + 1: rr.stop + 1, cc.start + 1: cc.stop + 1]
+        out[rs, cs] = core / 5.0
+        return None
+
+    res = eng.run([d], compute)
+    # Oracle: same operation globally.
+    pad = np.pad(grid, 1, mode="edge")
+    oracle = (
+        pad[1:-1, 1:-1] + pad[2:, 1:-1] + pad[:-2, 1:-1]
+        + pad[1:-1, 2:] + pad[1:-1, :-2]
+    ) / 5.0
+    np.testing.assert_allclose(out, oracle, rtol=1e-5, atol=1e-5)
+    assert res.n_tasks == res.np
+
+
+def test_engine_parallel_threads_disjoint_writes():
+    """Threaded execution with disjoint result slots must be race-free."""
+    d = Array1DDistribution(length=10_000, element_size=8)
+    eng = Engine(paper_system_a(), n_workers=8, tcl=4 * 1024,
+                 schedule="srrc", parallel=True)
+
+    def compute(task):
+        ((sl,),) = task  # one sub-domain, 1-D region
+        return sl.stop - sl.start
+
+    res = eng.run([d], compute)
+    assert sum(r for r in res.results) == 10_000
+    assert res.n_tasks >= 8

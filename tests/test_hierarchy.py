@@ -1,0 +1,120 @@
+"""Memory-hierarchy model tests (paper §3.1): JSON round-trip, Listing 1
+shape, sysfs reader on this container, TPU presets."""
+
+import json
+import os
+
+import pytest
+
+from repro.core import (
+    MemoryLevel,
+    paper_system_a,
+    read_linux_hierarchy,
+    tpu_hierarchy,
+)
+
+LISTING_1 = """
+{
+ "siblings": [[0,2,4,6],[1,3,5,7]],
+ "size": 4294967296,
+ "child": {
+  "siblings": [[0,2,4,6],[1,3,5,7]],
+  "size": 6291456,
+  "cacheLineSize": 64,
+  "child": {
+   "siblings": [[0],[1],[2],[3],[4],[5],[6],[7]],
+   "size": 524288,
+   "cacheLineSize": 64,
+   "child": {
+    "siblings": [[0],[1],[2],[3],[4],[5],[6],[7]],
+    "size": 65536,
+    "cacheLineSize": 64,
+    "child": null
+   }
+  }
+ }
+}
+"""
+
+
+class TestJSONSchema:
+    def test_listing1_parses(self):
+        h = MemoryLevel.from_json(LISTING_1)
+        levels = list(h.levels())
+        assert len(levels) == 4  # RAM, L3, L2, L1
+        assert levels[0].size == 4294967296
+        assert levels[0].cache_line_size is None
+        assert levels[1].size == 6291456
+        assert levels[3].size == 65536
+
+    def test_round_trip(self):
+        h = MemoryLevel.from_json(LISTING_1)
+        h2 = MemoryLevel.from_json(h.to_json())
+        assert h2.to_dict() == h.to_dict()
+
+    def test_llc_and_per_core(self):
+        h = MemoryLevel.from_json(LISTING_1)
+        llc = h.llc()
+        assert llc.size == 6291456
+        assert llc.cores_per_copy == 4
+        assert llc.per_core_size() == 6291456 // 4
+        # Private L1: per-core share is the full size.
+        l1 = list(h.levels())[-1]
+        assert l1.per_core_size() == 65536
+
+    def test_lowest_shared_cache(self):
+        h = MemoryLevel.from_json(LISTING_1)
+        assert h.lowest_shared_cache().size == 6291456  # only L3 is shared
+
+
+class TestPresets:
+    def test_system_a_matches_paper_spec(self):
+        h = paper_system_a()
+        l1 = h.find("L1")
+        l2 = h.find("L2")
+        l3 = h.find("L3")
+        assert l1.size == 64 * 1024 and l1.cores_per_copy == 1
+        assert l2.size == 512 * 1024
+        assert l3.size == 6 * 1024 * 1024 and l3.cores_per_copy == 4
+
+    def test_tpu_preset_levels(self):
+        h = tpu_hierarchy(hbm_bytes=16 << 30, vmem_bytes=128 << 20)
+        names = [l.name for l in h.levels()]
+        assert names == ["HBM", "VMEM", "VREG"]
+        assert h.find("VMEM").per_core_size() == 128 << 20
+        # The "cache line" analogue is the (8,128) f32 register tile.
+        assert h.find("VMEM").cache_line_size == 8 * 128 * 4
+
+
+class TestSysfsReader:
+    def test_reads_this_container(self):
+        if not os.path.isdir("/sys/devices/system/cpu/cpu0/cache"):
+            pytest.skip("no sysfs cache info in this container")
+        h = read_linux_hierarchy()
+        caches = h.cache_levels()
+        assert caches, "expected at least one cache level"
+        # Innermost must be the smallest; all levels JSON round-trip.
+        sizes = [c.size for c in caches]
+        assert sizes == sorted(sizes, reverse=True) or len(sizes) == 1
+        MemoryLevel.from_json(h.to_json())
+
+    def test_reader_on_synthetic_tree(self, tmp_path):
+        # Build a fake sysfs: 2 cpus, private L1d, shared L2.
+        for cpu in (0, 1):
+            for idx, (lvl, size, typ, shared) in enumerate(
+                [(1, "32K", "Data", f"{cpu}"), (1, "32K", "Instruction", f"{cpu}"),
+                 (2, "1024K", "Unified", "0-1")]
+            ):
+                d = tmp_path / f"cpu{cpu}" / "cache" / f"index{idx}"
+                d.mkdir(parents=True)
+                (d / "level").write_text(str(lvl))
+                (d / "size").write_text(size)
+                (d / "type").write_text(typ)
+                (d / "coherency_line_size").write_text("64")
+                (d / "shared_cpu_list").write_text(shared)
+        h = read_linux_hierarchy(str(tmp_path))
+        caches = h.cache_levels()
+        assert len(caches) == 2  # instruction cache skipped
+        l2, l1 = caches
+        assert l2.size == 1024 * 1024 and l2.cores_per_copy == 2
+        assert l1.size == 32 * 1024 and l1.cores_per_copy == 1

@@ -1,0 +1,217 @@
+"""Pallas kernel allclose tests vs the pure-jnp oracles (interpret mode on
+CPU executes the real block program). Shape/dtype sweeps per kernel."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.autotile import AttentionTilePlan, MatmulTilePlan
+from repro.kernels import flash_attention, matmul_cc, ssd_scan
+from repro.kernels.ref import flash_attention_ref, matmul_ref, ssd_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    # f32 tolerance reflects blocked-vs-flat summation order, not error.
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# matmul_cc
+# ---------------------------------------------------------------------------
+
+MM_SHAPES = [
+    (128, 128, 128), (256, 128, 64), (64, 256, 128), (72, 130, 50),
+    (8, 512, 8), (300, 100, 200),
+]
+
+
+@pytest.mark.parametrize("m,k,n", MM_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_cc_matches_ref(m, k, n, dtype):
+    ka, kb = jax.random.split(jax.random.fold_in(KEY, m * k + n))
+    a = jax.random.normal(ka, (m, k), dtype)
+    b = jax.random.normal(kb, (k, n), dtype)
+    plan = MatmulTilePlan(m=m, k=k, n=n, bm=min(64, m), bk=min(64, k),
+                          bn=min(64, n), order="cc", np=1,
+                          est_vmem_bytes=0, strategy="cache_conscious")
+    out = matmul_cc(a, b, plan=plan, interpret=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(matmul_ref(a, b), np.float32),
+                               **_tol(dtype))
+
+
+@pytest.mark.parametrize("order", ["cc", "srrc"])
+def test_matmul_orders_agree(order):
+    a = jax.random.normal(KEY, (192, 256), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (256, 320), jnp.float32)
+    plan = MatmulTilePlan(m=192, k=256, n=320, bm=64, bk=64, bn=64,
+                          order=order, np=1, est_vmem_bytes=0,
+                          strategy="cache_conscious")
+    out = matmul_cc(a, b, plan=plan, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a @ b),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(min_value=8, max_value=200),
+    k=st.integers(min_value=8, max_value=200),
+    n=st.integers(min_value=8, max_value=200),
+)
+def test_matmul_cc_ragged_property(m, k, n):
+    a = jax.random.normal(KEY, (m, k), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(KEY, 7), (k, n), jnp.float32)
+    plan = MatmulTilePlan(m=m, k=k, n=n, bm=32, bk=32, bn=32, order="cc",
+                          np=1, est_vmem_bytes=0, strategy="cache_conscious")
+    out = matmul_cc(a, b, plan=plan, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a @ b),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FA_SHAPES = [
+    # (B, H, Sq, Sk, D)
+    (1, 2, 128, 128, 64),
+    (2, 1, 64, 256, 32),     # decode-ish: kv longer than q
+    (1, 1, 100, 100, 64),    # ragged
+    (1, 2, 8, 512, 128),
+]
+
+
+@pytest.mark.parametrize("b,h,sq,sk,d", FA_SHAPES)
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(b, h, sq, sk, d, causal, dtype):
+    kq, kk, kv = jax.random.split(jax.random.fold_in(KEY, sq * sk), 3)
+    q = jax.random.normal(kq, (b, h, sq, d), dtype)
+    k = jax.random.normal(kk, (b, h, sk, d), dtype)
+    v = jax.random.normal(kv, (b, h, sk, d), dtype)
+    plan = AttentionTilePlan(q_len=sq, kv_len=sk, head_dim=d,
+                             block_q=64, block_kv=64, np=1, est_vmem_bytes=0)
+    out = flash_attention(q, k, v, causal=causal, plan=plan, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_block_sweep():
+    """Different decomposer block choices must not change the result."""
+    q = jax.random.normal(KEY, (1, 1, 256, 64), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 3), (1, 1, 256, 64),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(KEY, 4), (1, 1, 256, 64),
+                          jnp.float32)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    for bq, bkv in [(32, 32), (64, 128), (128, 64), (256, 256), (8, 8)]:
+        plan = AttentionTilePlan(q_len=256, kv_len=256, head_dim=64,
+                                 block_q=bq, block_kv=bkv, np=1,
+                                 est_vmem_bytes=0)
+        out = flash_attention(q, k, v, causal=True, plan=plan, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5, err_msg=f"{bq}x{bkv}")
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+SSD_SHAPES = [
+    # (B, S, H, P, N, chunk)
+    (1, 64, 2, 16, 16, 16),
+    (2, 128, 1, 32, 16, 32),
+    (1, 100, 2, 16, 8, 32),   # ragged seq vs chunk
+    (1, 64, 4, 64, 64, 64),
+]
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", SSD_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_matches_sequential_ref(b, s, h, p, n, chunk, dtype):
+    keys = jax.random.split(jax.random.fold_in(KEY, s * p), 5)
+    x = jax.random.normal(keys[0], (b, s, h, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(keys[1], (b, s, h),
+                                           jnp.float32)) * 0.5
+    A = -jnp.exp(jax.random.normal(keys[2], (h,), jnp.float32) * 0.3)
+    Bm = jax.random.normal(keys[3], (b, s, n), dtype)
+    Cm = jax.random.normal(keys[4], (b, s, n), dtype)
+    out = ssd_scan(x, dt.astype(dtype), A, Bm, Cm, chunk=chunk,
+                   interpret=True)
+    ref = ssd_ref(x.astype(jnp.float32), dt, A, Bm.astype(jnp.float32),
+                  Cm.astype(jnp.float32))
+    tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol)
+
+
+def test_ssd_chunk_invariance():
+    """Chunk size is a pure performance knob: results must not move."""
+    b, s, h, p, n = 1, 128, 2, 16, 16
+    keys = jax.random.split(KEY, 5)
+    x = jax.random.normal(keys[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(keys[1], (b, s, h))) * 0.5
+    A = -jnp.exp(jax.random.normal(keys[2], (h,)) * 0.3)
+    Bm = jax.random.normal(keys[3], (b, s, n))
+    Cm = jax.random.normal(keys[4], (b, s, n))
+    outs = [
+        np.asarray(ssd_scan(x, dt, A, Bm, Cm, chunk=c, interpret=True))
+        for c in (16, 32, 64, 128)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Model-layer chunked implementations vs the same oracles
+# ---------------------------------------------------------------------------
+
+def test_model_ssd_chunked_matches_ref():
+    from repro.models.mamba2 import ssd_chunked
+
+    b, s, h, p, n = 2, 96, 2, 16, 16
+    keys = jax.random.split(jax.random.fold_in(KEY, 99), 5)
+    x = jax.random.normal(keys[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(keys[1], (b, s, h))) * 0.5
+    A = -jnp.exp(jax.random.normal(keys[2], (h,)) * 0.3)
+    Bm = jax.random.normal(keys[3], (b, s, n))
+    Cm = jax.random.normal(keys[4], (b, s, n))
+    y, _ = ssd_chunked(x, dt, A, Bm, Cm, chunk=32)
+    ref = ssd_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mlstm_chunkwise_matches_step():
+    from repro.models.xlstm import mlstm_chunkwise, mlstm_step
+
+    b, s, h, d = 1, 48, 2, 16
+    keys = jax.random.split(jax.random.fold_in(KEY, 123), 5)
+    q = jax.random.normal(keys[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(keys[1], (b, s, h, d), jnp.float32)
+    v = jax.random.normal(keys[2], (b, s, h, d), jnp.float32)
+    i_pre = jax.random.normal(keys[3], (b, s, h), jnp.float32)
+    f_pre = jax.random.normal(keys[4], (b, s, h), jnp.float32) + 1.0
+
+    out_c, _ = mlstm_chunkwise(q, k, v, i_pre, f_pre, chunk=16)
+
+    import numpy as onp
+    C = jnp.zeros((b, h, d, d))
+    nvec = jnp.zeros((b, h, d))
+    m = jnp.full((b, h), -1e30)
+    outs = []
+    for t in range(s):
+        o, (C, nvec, m) = mlstm_step(q[:, t], k[:, t], v[:, t],
+                                     i_pre[:, t], f_pre[:, t], (C, nvec, m))
+        outs.append(o)
+    ref = jnp.stack(outs, axis=1)
+    onp.testing.assert_allclose(onp.asarray(out_c), onp.asarray(ref),
+                                rtol=2e-4, atol=2e-4)

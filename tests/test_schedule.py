@@ -1,0 +1,195 @@
+"""Scheduling tests: CC (Fig. 4), SRRC (Figs. 5-6), synchronization-freedom,
+and grid-order properties."""
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    cc_range,
+    cc_schedule,
+    grid_order,
+    lowest_level_shared_cache_groups,
+    paper_system_a,
+    paper_system_i,
+    srrc_cluster_size,
+    srrc_schedule,
+    srrc_worker_tasks,
+)
+
+
+# ---------------------------------------------------------------------------
+# Contiguous Clustering (paper §2.2.1, Fig. 4: 14 tasks over 4 workers)
+# ---------------------------------------------------------------------------
+
+class TestCC:
+    def test_fig4_14_tasks_4_workers(self):
+        sched = cc_schedule(4, 14)
+        # First r = 14 mod 4 = 2 workers get one extra task.
+        assert [len(s) for s in sched] == [4, 4, 3, 3]
+        assert sched[0] == [0, 1, 2, 3]
+        assert sched[1] == [4, 5, 6, 7]
+        assert sched[2] == [8, 9, 10]
+        assert sched[3] == [11, 12, 13]
+
+    def test_exact_division(self):
+        sched = cc_schedule(4, 16)
+        assert [len(s) for s in sched] == [4, 4, 4, 4]
+
+    def test_more_workers_than_tasks(self):
+        sched = cc_schedule(8, 3)
+        assert [len(s) for s in sched] == [1, 1, 1, 0, 0, 0, 0, 0]
+
+
+@settings(max_examples=300, deadline=None)
+@given(
+    n_workers=st.integers(min_value=1, max_value=128),
+    n_tasks=st.integers(min_value=0, max_value=10_000),
+)
+def test_cc_disjoint_contiguous_balanced(n_workers, n_tasks):
+    sched = cc_schedule(n_workers, n_tasks)
+    flat = [t for s in sched for t in s]
+    # Full disjoint cover, in order (contiguity).
+    assert flat == list(range(n_tasks))
+    # Balance within one task.
+    sizes = [len(s) for s in sched]
+    assert max(sizes) - min(sizes) <= 1
+    # Ranges are locally computable and consistent (synchronization-free).
+    for r in range(n_workers):
+        lo, hi = cc_range(r, n_workers, n_tasks)
+        assert sched[r] == list(range(lo, hi))
+
+
+# ---------------------------------------------------------------------------
+# Sibling Round-Robin Clustering (paper §2.2.2)
+# ---------------------------------------------------------------------------
+
+class TestSRRC:
+    def test_cluster_size_formula(self):
+        # LLC/TCL = 6 MiB / 512 KiB = 12, 4 cores per LLC -> already a
+        # multiple -> no padding under the stated remainder-only intent.
+        assert srrc_cluster_size(6 << 20, 512 << 10, 4) == 12
+        # LLC/TCL = 10, 4 cores -> pad to 12.
+        assert srrc_cluster_size(10 * (512 << 10), 512 << 10, 4) == 12
+
+    def test_full_clusters_land_in_single_group(self):
+        groups = [[0, 1], [2, 3]]
+        sched = srrc_schedule(40, llc_size=8 << 20, tcl_size=2 << 20,
+                              worker_groups=groups)
+        cs = sched.cluster_size
+        for j in range(sched.n_full_clusters):
+            cluster_tasks = set(range(j * cs, (j + 1) * cs))
+            g = sched.worker_groups[j % len(groups)]
+            holders = {
+                w
+                for w in range(4)
+                for t in sched.assignment[w]
+                if t in cluster_tasks
+            }
+            assert holders <= set(g)
+
+    def test_round_robin_across_groups(self):
+        groups = [[0], [1], [2], [3]]
+        sched = srrc_schedule(16, llc_size=4, tcl_size=1, worker_groups=groups)
+        # cluster_size = 4/1 = 4, padded for 1 core -> 4; 4 clusters, 4 groups.
+        assert sched.cluster_size == 4
+        assert sched.n_full_clusters == 4
+        assert sched.assignment[0] == [0, 1, 2, 3]
+        assert sched.assignment[1] == [4, 5, 6, 7]
+        assert sched.assignment[2] == [8, 9, 10, 11]
+        assert sched.assignment[3] == [12, 13, 14, 15]
+
+    def test_remainder_goes_to_cc_cluster(self):
+        groups = [[0], [1]]
+        # 10 tasks, cluster size 4 -> 2 full clusters (8 tasks) RR'd to the 2
+        # groups; tail (2 tasks) CC'd across all workers.
+        sched = srrc_schedule(10, llc_size=4, tcl_size=1, worker_groups=groups)
+        assert sched.cc_cluster_start == 8
+        assert 8 in sched.assignment[0] and 9 in sched.assignment[1]
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    n_tasks=st.integers(min_value=0, max_value=5000),
+    ratio=st.integers(min_value=1, max_value=64),
+    group_shape=st.sampled_from([(1, 1), (2, 2), (4, 4), (2, 4), (1, 4), (8, 2)]),
+)
+def test_srrc_disjoint_cover(n_tasks, ratio, group_shape):
+    n_groups, per_group = group_shape
+    groups = [
+        list(range(g * per_group, (g + 1) * per_group)) for g in range(n_groups)
+    ]
+    tcl = 64 << 10
+    sched = srrc_schedule(n_tasks, llc_size=ratio * tcl, tcl_size=tcl,
+                          worker_groups=groups)
+    flat = sorted(t for s in sched.assignment for t in s)
+    assert flat == list(range(n_tasks))
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    n_tasks=st.integers(min_value=0, max_value=2000),
+    ratio=st.integers(min_value=1, max_value=32),
+)
+def test_srrc_worker_stream_matches_materialized(n_tasks, ratio):
+    """The paper's §2.4 claim: every worker can compute its own index set
+    from rank alone. The generator must agree with the materialized table."""
+    groups = [[0, 1], [2, 3]]
+    tcl = 64 << 10
+    sched = srrc_schedule(n_tasks, llc_size=ratio * tcl, tcl_size=tcl,
+                          worker_groups=groups)
+    for rank in range(4):
+        stream = list(
+            srrc_worker_tasks(rank, n_tasks, ratio * tcl, tcl, groups)
+        )
+        assert stream == sched.assignment[rank]
+
+
+# ---------------------------------------------------------------------------
+# Affinity (paper §2.3)
+# ---------------------------------------------------------------------------
+
+class TestAffinity:
+    def test_system_a_lowest_shared_is_l3(self):
+        # System A: L1/L2 private, L3 shared by each quad -> LLSC groups are
+        # the two quads.
+        groups = lowest_level_shared_cache_groups(paper_system_a())
+        assert groups == [[0, 1, 2, 3], [4, 5, 6, 7]]
+
+    def test_system_i_lowest_shared_is_l1_ht_pairs(self):
+        # System I: hyperthread pairs share L1/L2 -> LLSC is L2 level pairs.
+        groups = lowest_level_shared_cache_groups(paper_system_i())
+        assert groups == [[0, 1], [2, 3], [4, 5], [6, 7]]
+
+
+# ---------------------------------------------------------------------------
+# TPU grid order (DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+class TestGridOrder:
+    def test_cc_row_major(self):
+        order = grid_order((2, 3), "cc")
+        assert order == [(0, 0), (0, 1), (0, 2), (1, 0), (1, 1), (1, 2)]
+
+    def test_srrc_serpentine(self):
+        order = grid_order((2, 3), "srrc")
+        assert order == [(0, 0), (0, 1), (0, 2), (1, 2), (1, 1), (1, 0)]
+
+    def test_srrc_adjacent_share_block(self):
+        # Consecutive visits differ in at most one non-leading coordinate
+        # step, so one operand block is always shared (the SRRC goal).
+        order = grid_order((4, 4), "srrc")
+        for a, b in zip(order, order[1:]):
+            manhattan = sum(abs(x - y) for x, y in zip(a, b))
+            assert manhattan == 1
+
+    @given(
+        gm=st.integers(min_value=1, max_value=8),
+        gn=st.integers(min_value=1, max_value=8),
+        gk=st.integers(min_value=1, max_value=8),
+        strategy=st.sampled_from(["cc", "srrc"]),
+    )
+    @settings(max_examples=100, deadline=None)
+    def test_grid_order_is_permutation(self, gm, gn, gk, strategy):
+        order = grid_order((gm, gn, gk), strategy)
+        assert len(order) == gm * gn * gk
+        assert len(set(order)) == len(order)

@@ -1,0 +1,213 @@
+"""Substrate tests: data pipeline, checkpointing, fault-tolerance helpers,
+optimizer, gradient compression."""
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager, latest_checkpoint, save_checkpoint
+from repro.configs import TrainConfig
+from repro.data import DataPipeline, SyntheticLMDataset
+from repro.ft import PreemptionHandler, StepWatchdog, StragglerPolicy
+from repro.optim import (
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    compress_gradient,
+    decompress_gradient,
+    ef_state_init,
+    lr_schedule,
+)
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+class TestData:
+    def test_deterministic_batches(self):
+        ds = SyntheticLMDataset(vocab_size=1000, seq_len=64, seed=42)
+        a = ds.batch(7, 16)
+        b = ds.batch(7, 16)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        c = ds.batch(8, 16)
+        assert not np.array_equal(a["tokens"], c["tokens"])
+
+    def test_labels_are_shifted_tokens(self):
+        ds = SyntheticLMDataset(vocab_size=1000, seq_len=64, seed=0)
+        b = ds.batch(0, 4)
+        assert b["tokens"].shape == (4, 64)
+        assert b["labels"].shape == (4, 64)
+        # labels[i] == tokens[i+1] within the stream.
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+    def test_host_sharding_partitions_global_batch(self):
+        ds = SyntheticLMDataset(vocab_size=100, seq_len=16, seed=1)
+        full = ds.batch(3, 8)
+        parts = []
+        pipes = []
+        for h in range(4):
+            p = DataPipeline(ds, global_batch=8, host_index=h, host_count=4,
+                             start_step=3, prefetch=1)
+            pipes.append(p)
+            step, hb = next(p)
+            assert step == 3
+            parts.append(hb["tokens"])
+        for p in pipes:
+            p.close()
+        np.testing.assert_array_equal(np.concatenate(parts), full["tokens"])
+
+    def test_resume_from_step(self):
+        ds = SyntheticLMDataset(vocab_size=100, seq_len=16, seed=1)
+        p = DataPipeline(ds, global_batch=4, start_step=11, prefetch=1)
+        step, hb = next(p)
+        p.close()
+        assert step == 11
+        np.testing.assert_array_equal(hb["tokens"], ds.batch(11, 4)["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+class TestCkpt:
+    def _tree(self, x=1.0):
+        return {"a": np.full((4, 4), x, np.float32),
+                "b": {"c": np.arange(6).reshape(2, 3)}}
+
+    def test_atomic_save_and_latest(self, tmp_path):
+        d = str(tmp_path)
+        save_checkpoint(d, 5, self._tree(1.0))
+        save_checkpoint(d, 9, self._tree(2.0))
+        assert latest_checkpoint(d).endswith("step_00000009")
+        # A stale .tmp dir must never be picked up.
+        os.makedirs(os.path.join(d, "step_00000099.tmp"))
+        assert latest_checkpoint(d).endswith("step_00000009")
+
+    def test_keep_k_gc(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, self._tree(float(s)), blocking=True)
+        names = sorted(os.listdir(tmp_path))
+        assert names == ["step_00000003", "step_00000004"]
+
+    def test_restore_roundtrip(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        tree = self._tree(3.5)
+        mgr.save(12, tree, blocking=True)
+        restored, manifest = mgr.restore_latest(self._tree(0.0))
+        assert manifest["step"] == 12
+        np.testing.assert_array_equal(restored["a"], tree["a"])
+        np.testing.assert_array_equal(restored["b"]["c"], tree["b"]["c"])
+
+    def test_restore_missing_leaf_raises(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, {"a": np.zeros(2)}, blocking=True)
+        with pytest.raises(KeyError):
+            mgr.restore_latest({"a": np.zeros(2), "zz": np.zeros(3)})
+
+    def test_namedtuple_state_roundtrip(self, tmp_path):
+        params = {"w": jnp.ones((3, 3))}
+        opt = adamw_init(params)
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(2, (params, opt), blocking=True)
+        tpl = jax.tree.map(lambda x: np.zeros(x.shape, x.dtype), (params, opt))
+        (rp, ro), m = mgr.restore_latest(tpl)
+        assert m["step"] == 2
+        assert int(ro.step) == 0
+        np.testing.assert_array_equal(rp["w"], np.ones((3, 3)))
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance
+# ---------------------------------------------------------------------------
+
+class TestFT:
+    def test_preemption_flag(self):
+        h = PreemptionHandler()
+        assert not h.should_stop
+        h.request_stop()
+        assert h.should_stop
+
+    def test_watchdog_fires_on_slow_step(self):
+        fired = []
+        wd = StepWatchdog(deadline_s=0.05,
+                          on_timeout=lambda s, dt: fired.append((s, dt)))
+        wd.start_step(3)
+        time.sleep(0.15)
+        wd.end_step()
+        assert fired and fired[0][0] == 3
+
+    def test_watchdog_quiet_on_fast_step(self):
+        fired = []
+        wd = StepWatchdog(deadline_s=0.5,
+                          on_timeout=lambda s, dt: fired.append(s))
+        wd.start_step(1)
+        wd.end_step()
+        time.sleep(0.05)
+        assert not fired
+
+    def test_straggler_detection(self):
+        pol = StragglerPolicy(k=3.0, min_samples=4)
+        for t in range(10):
+            for host in range(8):
+                pol.record(host, 1.0 + (3.0 if host == 5 else 0.0)
+                           + 0.01 * t)
+        assert pol.stragglers() == [5]
+        plan = pol.replacement_plan(spares=[100, 101])
+        assert plan == {5: 100}
+
+
+# ---------------------------------------------------------------------------
+# Optimizer + compression
+# ---------------------------------------------------------------------------
+
+class TestOptim:
+    def test_adamw_minimizes_quadratic(self):
+        cfg = TrainConfig(learning_rate=0.1, warmup_steps=1, total_steps=200,
+                          weight_decay=0.0, grad_clip=10.0)
+        params = {"w": jnp.array([5.0, -3.0])}
+        opt = adamw_init(params)
+        for _ in range(150):
+            grads = {"w": 2 * params["w"]}
+            params, opt, _ = adamw_update(params, grads, opt, cfg)
+        assert float(jnp.max(jnp.abs(params["w"]))) < 0.3
+
+    def test_clip_by_global_norm(self):
+        g = {"a": jnp.full((10,), 10.0)}
+        clipped, norm = clip_by_global_norm(g, 1.0)
+        assert float(norm) == pytest.approx(np.sqrt(1000.0), rel=1e-5)
+        got = float(jnp.linalg.norm(clipped["a"]))
+        assert got == pytest.approx(1.0, rel=1e-4)
+
+    def test_lr_schedule_warmup_and_decay(self):
+        cfg = TrainConfig(learning_rate=1.0, warmup_steps=10, total_steps=100)
+        fn = lr_schedule(cfg)
+        assert float(fn(jnp.asarray(0))) == pytest.approx(0.0, abs=1e-6)
+        assert float(fn(jnp.asarray(10))) == pytest.approx(1.0, rel=1e-3)
+        assert float(fn(jnp.asarray(100))) < 0.11
+
+    def test_bf16_compression_roundtrip(self):
+        g = {"w": jnp.linspace(-1, 1, 64, dtype=jnp.float32)}
+        wire, scales, _ = compress_gradient(g, "bf16")
+        assert wire["w"].dtype == jnp.bfloat16
+        out = decompress_gradient(wire, "bf16", scales)
+        np.testing.assert_allclose(out["w"], g["w"], atol=1e-2)
+
+    def test_int8_ef_error_feedback_converges(self):
+        """Error feedback: accumulated quantized gradients track the true
+        sum (residual carried, not lost)."""
+        g = {"w": jnp.array([0.001, 0.5, -0.3], jnp.float32)}
+        ef = ef_state_init(g)
+        total = jnp.zeros(3)
+        for _ in range(50):
+            wire, scales, ef = compress_gradient(g, "int8_ef", ef)
+            assert wire["w"].dtype == jnp.int8
+            total = total + decompress_gradient(wire, "int8_ef", scales)["w"]
+        np.testing.assert_allclose(np.asarray(total),
+                                   np.asarray(g["w"]) * 50, rtol=0.02,
+                                   atol=5e-3)
