@@ -157,11 +157,42 @@ SECTIONS = {
 }
 
 
+def dry(_quick: bool) -> list:
+    """CI smoke: exercise the decomposer planning paths (chip and mesh
+    level) without running any timed benchmark loops."""
+    from repro.configs import get_model_config
+    from repro.dist.sharding import arch_rules, mesh_decomposition, mesh_hierarchy
+    from jax.sharding import AbstractMesh
+
+    out = plans(True)
+    mesh = AbstractMesh((("data", 16), ("model", 16)))
+    for arch in ("llama3.2-1b", "deepseek-v2-236b"):
+        cfg = get_model_config(arch)
+        rules = arch_rules(cfg, mesh)
+        out.append(
+            f"dry_mesh_rules_{arch},0,"
+            f"embed={rules.param_rules['embed']};np={rules.meta['mesh_np']};"
+            f"fits={rules.meta['mesh_fits']}")
+    dec = mesh_decomposition(mesh_hierarchy(mesh), sharded_bytes=1 << 40,
+                             max_np=16)
+    out.append(f"dry_mesh_decomposition_1TiB,0,np={dec.np};fits={dec.fits}")
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--dry", action="store_true",
+                    help="plan-only smoke run (CI): no timed benchmarks")
     args = ap.parse_args()
+    if args.dry:
+        # CI gate: unlike the benchmark sections below, failures here must
+        # propagate to a nonzero exit, not become an _ERROR CSV row.
+        print("name,us_per_call,derived")
+        for line in dry(args.quick):
+            print(line)
+        return
     names = args.only.split(",") if args.only else list(SECTIONS)
     print("name,us_per_call,derived")
     for name in names:

@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# CI entry point: the tier-1 suite on CPU plus the benchmark smoke step.
+#
+# The suite already includes the multi-device distributed tests --
+# tests/test_dist.py and tests/test_serve_policy.py spawn subprocesses with
+# --xla_force_host_platform_device_count so the main pytest process keeps
+# the single-device view (see the module docstrings there).
+#
+# PYTHONPATH=src is exported for parity with ROADMAP's tier-1 command, but
+# either `pip install -e .` or tests/conftest.py makes it optional.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q "$@"
+
+echo "== smoke: benchmark harness (--dry) =="
+python -m benchmarks.run --dry
+
+echo "CI OK"

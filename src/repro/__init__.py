@@ -1,0 +1,3 @@
+"""Cache-conscious run-time decomposition, L1 to mesh (see DESIGN.md)."""
+
+__version__ = "0.1.0"

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from functools import lru_cache
 from typing import Optional, Tuple
 
 from repro.core.decompose import (
@@ -153,6 +154,24 @@ def plan_matmul(
         est_vmem_bytes=_matmul_vmem_bytes(bm, bk, bn, dtype_bytes),
         strategy="cache_conscious",
     )
+
+
+@lru_cache(maxsize=512)
+def plan_matmul_cached(
+    m: int,
+    k: int,
+    n: int,
+    dtype_bytes: int = 2,
+    order: str = "cc",
+    n_workers: int = 1,
+    vmem_fraction: float = 1.0,
+) -> MatmulTilePlan:
+    """Memoized ``plan_matmul`` for callers that re-plan the same block shape
+    on every trace -- the ring overlap kernels (``repro.dist.overlap``) run
+    the search once per (local-shard shape, dtype) and reuse the plan for
+    every ring step and every subsequent retrace."""
+    return plan_matmul(m, k, n, dtype_bytes=dtype_bytes, order=order,
+                       n_workers=n_workers, vmem_fraction=vmem_fraction)
 
 
 def plan_matmul_horizontal(

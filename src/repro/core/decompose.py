@@ -8,6 +8,9 @@ number of partitions (§2.1.1), and the phi footprint estimators (§2.1.2):
   * ``phi_tpu``          -- TPU-native variant: pads block dims to the
                             (sublane x lane) register tile and accounts for
                             Pallas double buffering (DESIGN.md §2)
+  * ``phi_mesh``         -- mesh-level variant: per-chip shard bytes padded
+                            to the sharding granule, HBM as the TCL
+                            (DESIGN.md §2, used by ``repro.dist.sharding``)
 
 Paper-exact behaviour is covered by tests reproducing the §2.1.2 worked
 example (np=256, 1024x1024 int32 matmul, 64 KiB TCL -> phi_s = 49152 valid,
@@ -90,6 +93,32 @@ def make_phi_tpu(
     return phi_tpu
 
 
+def make_phi_mesh(granule_bytes: Optional[int] = None,
+                  overhead: float = 1.0) -> PhiFn:
+    """Mesh-level footprint estimator (DESIGN.md §2).
+
+    At the outermost level the "partition" is one chip's shard of a logical
+    tensor and the TCL is the chip's HBM. The cache-line analogue is the
+    sharding granule (one (sublane x lane) register tile per shard boundary
+    -- XLA pads uneven shards up to it), so the per-chip shard is rounded up
+    to ``granule_bytes`` (defaulting to the hierarchy's cache-line field).
+    ``overhead`` scales the estimate for transient copies the runtime keeps
+    alive alongside the resident shard (gradient buckets, all-gather
+    destinations) -- the structural analogue of phi_c's extra line.
+    """
+
+    def phi_mesh(cache_line_size: int, dist: Distribution, np_: int) -> float:
+        g = max(1, granule_bytes or cache_line_size or 1)
+        shard = dist.get_element_size() * dist.get_average_partition_size(np_)
+        return overhead * math.ceil(shard / g) * g
+
+    return phi_mesh
+
+
+#: Default mesh-level phi: granule from the hierarchy, no overhead factor.
+phi_mesh = make_phi_mesh()
+
+
 # ---------------------------------------------------------------------------
 # Algorithm 1: validate a candidate np
 # ---------------------------------------------------------------------------
@@ -156,7 +185,9 @@ def find_optimal_np(
     dists = list(domain)
     np_ = max(1, n_workers)
 
-    # Phase 1: exponential growth.
+    # Phase 1: exponential growth, clamped so max_np itself is probed even
+    # when it is not on the n_workers * 2^k sequence (a 6-chip data axis
+    # must try np=6, not stop after 4).
     hi: Optional[int] = None
     cand = np_
     while cand <= max_np:
@@ -168,7 +199,9 @@ def find_optimal_np(
         if status == 1:
             hi = cand
             break
-        cand *= 2
+        if cand == max_np:
+            break
+        cand = min(cand * 2, max_np)
     if hi is None:
         raise NoValidDecomposition(
             f"no valid np found in [{np_}, {max_np}] for TCL={tcl_per_core}"

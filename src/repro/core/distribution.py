@@ -115,6 +115,37 @@ class Array1DDistribution(Distribution):
 
 
 @dataclass
+class ReplicatedDistribution(Distribution):
+    """A sub-domain pinned whole to every worker.
+
+    At the mesh level (DESIGN.md §2) this models replicated state --
+    activations kept per chip, small norms/bias tensors, non-shardable
+    buffers: partitioning the rest of the domain harder does not shrink it,
+    so ``get_average_partition_size`` ignores ``np``. It contributes a
+    constant term to the phi footprint, exactly like the paper's
+    "other state competing for the TCL" observation (§4.4.2).
+    """
+
+    nbytes: int
+
+    def validate(self, np_: int) -> int:
+        return 1 if np_ >= 1 else 0
+
+    def get_element_size(self) -> int:
+        return 1
+
+    def get_average_partition_size(self, np_: int) -> float:
+        return float(self.nbytes)
+
+    def partition(self, np_: int) -> List[Tuple[slice, ...]]:
+        return [(slice(0, self.nbytes),) for _ in range(np_)]
+
+    @property
+    def total_elements(self) -> int:
+        return self.nbytes
+
+
+@dataclass
 class RowBlockDistribution(Distribution):
     """Horizontal slabs of whole rows of a 2-D row-major array.
 

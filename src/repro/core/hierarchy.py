@@ -246,6 +246,8 @@ def tpu_hierarchy(
     vmem_bytes: int,
     lane_tile_bytes: int = 8 * 128 * 4,
     n_cores: int = 1,
+    mesh_devices: int = 0,
+    ici_bytes: Optional[int] = None,
 ) -> MemoryLevel:
     """TPU memory hierarchy in the paper's schema (DESIGN.md §2).
 
@@ -253,8 +255,33 @@ def tpu_hierarchy(
     (per-core scratchpad), and the "cache line" analogue is the
     (sublane x lane) register tile -- the minimal granule at which data is
     staged into VREGs, hence the unit footprints must be padded to.
+
+    With ``mesh_devices > 0`` the device mesh becomes the outermost memory
+    level (DESIGN.md §2): the interconnect ("ICI") holds the whole logical
+    array, each chip's HBM is one *copy* of the target cache level (the
+    "cores" of this level are chips), and the sharding granule -- one
+    (sublane x lane) register tile per shard boundary -- plays the cache-line
+    role. The per-chip sub-hierarchy (VMEM/VREG) hangs below unchanged, so
+    the same ``Decomposer``/``find_optimal_np`` machinery that sizes Pallas
+    blocks against VMEM sizes parameter shards against per-chip HBM.
     """
     cores = list(range(n_cores))
     vreg = MemoryLevel(1024, [[c] for c in cores], lane_tile_bytes, None, "VREG")
     vmem = MemoryLevel(vmem_bytes, [[c] for c in cores], lane_tile_bytes, vreg, "VMEM")
-    return MemoryLevel(hbm_bytes, [cores], None, vmem, "HBM")
+    if mesh_devices <= 0:
+        return MemoryLevel(hbm_bytes, [cores], None, vmem, "HBM")
+    chips = list(range(mesh_devices))
+    hbm = MemoryLevel(
+        size=hbm_bytes,
+        siblings=[[c] for c in chips],
+        cache_line_size=lane_tile_bytes,
+        child=vmem,
+        name="HBM",
+    )
+    return MemoryLevel(
+        size=ici_bytes or mesh_devices * hbm_bytes,
+        siblings=[chips],
+        cache_line_size=None,
+        child=hbm,
+        name="ICI",
+    )

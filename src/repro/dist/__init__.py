@@ -1,0 +1,41 @@
+"""Distribution layer: the device mesh as the outermost memory level.
+
+The paper decomposes a data-parallel domain against a *hierarchy* of
+memories, sizing each partition for the target cache level (TCL).  This
+package applies the same machinery one level further out (DESIGN.md §2):
+
+  * ``sharding``  -- logical-axis sharding rules where the FSDP / TP /
+    replicated choice is made by ``Decomposer``/``find_optimal_np`` with
+    ``phi_mesh`` against the per-chip HBM budget, not by a hard-coded table.
+  * ``overlap``   -- ring all-gather / reduce-scatter matmuls that stream
+    mesh-level partitions over the interconnect while the previous one is on
+    the MXU (the CC/SRRC "compute the resident partition while fetching the
+    next" idea lifted to the ICI).
+  * ``pipeline``  -- GPipe-style microbatch schedule over a mesh axis.
+"""
+
+from repro.dist.sharding import (  # noqa: F401
+    ShardingRules,
+    active_rule,
+    arch_rules,
+    constrain,
+    default_rules,
+    logical_sharding,
+    mesh_decomposition,
+    param_shardings,
+    use_mesh_rules,
+    with_batch_guard,
+)
+
+__all__ = [
+    "ShardingRules",
+    "active_rule",
+    "arch_rules",
+    "constrain",
+    "default_rules",
+    "logical_sharding",
+    "mesh_decomposition",
+    "param_shardings",
+    "use_mesh_rules",
+    "with_batch_guard",
+]

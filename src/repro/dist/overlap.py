@@ -1,0 +1,152 @@
+"""Ring collective matmuls: stream mesh-level partitions while computing.
+
+The paper's CC/SRRC schedules keep one partition resident while the next is
+being fetched from the level above.  At the mesh level the "level above" is
+the interconnect: these kernels decompose the contraction into one partition
+per chip and overlap the ``lax.ppermute`` transfer of the next partition
+with the MXU work on the current one (XLA turns the independent permute
+into an async collective-permute-start/done pair around the dot).
+
+  * ``make_ag_matmul`` -- all-gather matmul: x is k-sharded (the layout a
+    preceding row-parallel layer leaves it in), w is n-sharded; each ring
+    step multiplies the resident k-chunk of x against the matching rows of
+    the local w shard.  Output is n-sharded; globally ``y == x @ w``.
+  * ``make_rs_matmul`` -- reduce-scatter matmul: x is k-sharded, w is
+    k-sharded (row-parallel); the partial-sum accumulator for each output
+    row block rides the ring, each chip adding its local contribution.
+    Output is m-sharded; globally ``y == x @ w``.
+
+The per-step block compute reuses the chip-level decomposer: on TPU the
+local dot runs the Pallas ``matmul_cc`` kernel under a memoized
+``plan_matmul_cached`` plan (the same shard shape re-plans once, not per
+trace); elsewhere it lowers to ``jnp.dot``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def _ring_perm(n: int):
+    return [(i, (i + 1) % n) for i in range(n)]
+
+
+def _block_matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """One ring step's block product, decomposer-tiled on TPU."""
+    if jax.default_backend() == "tpu":
+        from repro.core.autotile import plan_matmul_cached
+        from repro.kernels.matmul_cc import matmul_cc
+
+        plan = plan_matmul_cached(a.shape[0], a.shape[1], b.shape[1],
+                                  dtype_bytes=a.dtype.itemsize)
+        return matmul_cc(a, b, plan=plan)
+    return jnp.dot(a, b)
+
+
+def _check_div(name: str, dim: int, n: int) -> None:
+    if dim % n != 0:
+        raise ValueError(
+            f"{name}={dim} must divide evenly over the {n}-way ring axis")
+
+
+def make_ag_matmul(mesh: Mesh, axis: str = "model"):
+    """All-gather matmul ``y = x @ w`` with x sharded on k and w on n.
+
+    Ring schedule: at step s each chip holds the k-chunk originally owned by
+    chip ``(i - s) mod p``, multiplies it against the matching row band of
+    its w shard, and forwards it -- the permute of step s overlaps the dot
+    of step s (the all-gather never materializes the full x).
+    """
+    p = dict(mesh.shape)[axis]
+
+    def ag_local(x_blk: jax.Array, w_blk: jax.Array) -> jax.Array:
+        # x_blk: (m, k/p) -- my k-chunk; w_blk: (k, n/p) -- my n columns.
+        m, kb = x_blk.shape
+        nb = w_blk.shape[1]
+        idx = jax.lax.axis_index(axis)
+        acc0 = jnp.zeros((m, nb), jnp.promote_types(x_blk.dtype, w_blk.dtype))
+
+        def rows_for(step):
+            src = (idx - step) % p     # owner of the resident chunk
+            return jax.lax.dynamic_slice(w_blk, (src * kb, 0), (kb, nb))
+
+        def body(s, carry):
+            chunk, acc = carry
+            acc = acc + _block_matmul(chunk, rows_for(s))
+            chunk = jax.lax.ppermute(chunk, axis, _ring_perm(p))
+            return chunk, acc
+
+        chunk, acc = jax.lax.fori_loop(0, p - 1, body, (x_blk, acc0))
+        return acc + _block_matmul(chunk, rows_for(p - 1))
+
+    sharded = shard_map(
+        ag_local, mesh=mesh,
+        in_specs=(P(None, axis), P(None, axis)),
+        out_specs=P(None, axis),
+        check_rep=False,
+    )
+
+    @jax.jit
+    def ag_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+        if x.shape[1] != w.shape[0]:
+            # The ring slices w by dynamic_slice, which would clamp a
+            # mismatched contraction dim into silent garbage.
+            raise ValueError(f"contraction mismatch: x {x.shape} @ w {w.shape}")
+        _check_div("k", x.shape[1], p)
+        _check_div("n", w.shape[1], p)
+        return sharded(x, w)
+
+    return ag_matmul
+
+
+def make_rs_matmul(mesh: Mesh, axis: str = "model"):
+    """Reduce-scatter matmul ``y = x @ w`` with x and w sharded on k.
+
+    Each output row block's partial-sum accumulator travels the ring once,
+    visiting every chip; chip i computes row block ``(i + p-1 - s) mod p``
+    of its local partial product at step s, so the accumulator it forwards
+    is always the one its successor must extend (the reduce-scatter is the
+    ring itself -- no (m, n) intermediate is ever materialized).
+    """
+    p = dict(mesh.shape)[axis]
+
+    def rs_local(x_blk: jax.Array, w_blk: jax.Array) -> jax.Array:
+        # x_blk: (m, k/p) -- my k columns; w_blk: (k/p, n) -- my k rows.
+        m, kb = x_blk.shape
+        n = w_blk.shape[1]
+        mb = m // p
+        idx = jax.lax.axis_index(axis)
+        out_dtype = jnp.promote_types(x_blk.dtype, w_blk.dtype)
+
+        def partial_for(step):
+            r = (idx + (p - 1 - step)) % p
+            rows = jax.lax.dynamic_slice(x_blk, (r * mb, 0), (mb, kb))
+            return _block_matmul(rows, w_blk).astype(out_dtype)
+
+        def body(s, acc):
+            acc = acc + partial_for(s)
+            return jax.lax.ppermute(acc, axis, _ring_perm(p))
+
+        acc = jax.lax.fori_loop(0, p - 1, body,
+                                jnp.zeros((mb, n), out_dtype))
+        return acc + partial_for(p - 1)
+
+    sharded = shard_map(
+        rs_local, mesh=mesh,
+        in_specs=(P(None, axis), P(axis, None)),
+        out_specs=P(axis, None),
+        check_rep=False,
+    )
+
+    @jax.jit
+    def rs_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+        if x.shape[1] != w.shape[0]:
+            raise ValueError(f"contraction mismatch: x {x.shape} @ w {w.shape}")
+        _check_div("k", x.shape[1], p)
+        _check_div("m", x.shape[0], p)
+        return sharded(x, w)
+
+    return rs_matmul

@@ -1,0 +1,400 @@
+"""Logical-axis sharding rules, chosen by the paper's decomposer.
+
+Model code names *logical* axes ("embed", "heads", "batch", ...); a
+``ShardingRules`` table maps each logical axis to zero or more mesh axes.
+The table itself is not hand-written per architecture: the mesh is treated
+as the outermost level of the memory hierarchy (DESIGN.md §2) and the
+FSDP / replicated choice for parameters is made by the paper's Algorithm 1
+(``find_optimal_np`` with ``phi_mesh``) against the per-chip HBM budget of
+``tpu_hierarchy(..., mesh_devices=N)``:
+
+  * ``np* == 1``  -- one partition: the parameter+optimizer state fits each
+    chip's HBM after tensor parallelism, so params replicate over the data
+    axes (cheapest collectives -- the mesh analogue of "the whole domain
+    fits the TCL").
+  * ``np* > 1``   -- the state must be decomposed harder: params shard over
+    the data axes (FSDP), exactly like the binary search relaxing np until
+    the partition fits.
+
+Tensor-parallel ("model" axis) rules are structural -- they follow from the
+architecture's divisibilities (heads, experts, vocab) -- while the
+memory-driven FSDP degree is the decomposer's call.  ``mesh_decomposition``
+exposes the raw search result for tests and diagnostics.
+"""
+
+from __future__ import annotations
+
+import threading
+from math import prod
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.decompose import (
+    NoValidDecomposition,
+    find_optimal_np,
+    make_phi_mesh,
+)
+from repro.core.distribution import Array1DDistribution, ReplicatedDistribution
+from repro.core.hierarchy import MemoryLevel
+
+AxisRule = Union[None, str, Tuple[str, ...]]
+PyTree = Any
+
+#: Resident bytes per parameter of the training state: fp32 master copy,
+#: AdamW mu + nu (fp32 default), and the bf16 compute cast made each step.
+TRAIN_STATE_BYTES_PER_PARAM = 4 + 4 + 4 + 2
+
+
+# ---------------------------------------------------------------------------
+# Rules table
+# ---------------------------------------------------------------------------
+
+
+def _rule_axes(rule: AxisRule) -> Tuple[str, ...]:
+    if rule is None:
+        return ()
+    if isinstance(rule, str):
+        return (rule,)
+    return tuple(rule)
+
+
+def _build_spec(table: Dict[str, AxisRule],
+                axes: Sequence[Optional[str]]) -> P:
+    """PartitionSpec from logical axes via the table; a mesh axis is used at
+    most once (first logical axis wins, matching GSPMD's constraint)."""
+    used: set = set()
+    entries = []
+    for ax in axes:
+        names = [n for n in _rule_axes(table.get(ax) if ax else None)
+                 if n not in used]
+        used.update(names)
+        if not names:
+            entries.append(None)
+        elif len(names) == 1:
+            entries.append(names[0])
+        else:
+            entries.append(tuple(names))
+    return P(*entries)
+
+
+@dataclass
+class ShardingRules:
+    """Logical-axis -> mesh-axis tables for parameters and activations.
+
+    ``meta`` carries the decomposer's provenance (mesh np*, budget, fit);
+    it is advisory and deliberately optional so callers may rebuild rules
+    positionally (``ShardingRules(param_rules, act_rules)``).
+    """
+
+    param_rules: Dict[str, AxisRule]
+    act_rules: Dict[str, AxisRule]
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    def param_spec(self, axes: Sequence[Optional[str]]) -> P:
+        return _build_spec(self.param_rules, axes)
+
+    def act_spec(self, axes: Sequence[Optional[str]]) -> P:
+        return _build_spec(self.act_rules, axes)
+
+
+# ---------------------------------------------------------------------------
+# Mesh-level decomposition (Algorithm 1 at the outermost level)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MeshDecomposition:
+    """Result of the mesh-level Algorithm 1 run."""
+
+    np: int                    # smallest partition count that fits per-chip HBM
+    budget_bytes: int          # TCL_PER_CORE: one chip's HBM
+    granule_bytes: int         # sharding granule (the mesh "cache line")
+    sharded_bytes: int         # state the search may partition
+    replicated_bytes: int      # state pinned to every chip
+    fits: bool                 # False: even the max realizable np overflows
+
+    @property
+    def replicated(self) -> bool:
+        return self.np <= 1
+
+
+def mesh_hierarchy(mesh, spec=None) -> MemoryLevel:
+    """The mesh in the paper's schema: ICI -> per-chip HBM -> VMEM -> VREG."""
+    from repro.hw.tpu import chip_spec
+
+    return (spec or chip_spec()).hierarchy(mesh_devices=mesh.size)
+
+
+def mesh_decomposition(
+    hierarchy: MemoryLevel,
+    sharded_bytes: int,
+    replicated_bytes: int = 0,
+    max_np: int = 1 << 16,
+) -> MeshDecomposition:
+    """Run Algorithm 1 with the per-chip HBM as the TCL.
+
+    The domain is the shardable training state (a 1-D byte range) plus a
+    replicated remainder; ``find_optimal_np`` returns the smallest partition
+    count whose per-chip footprint (``phi_mesh``) fits one HBM copy.  If no
+    ``np <= max_np`` fits, the decomposition saturates at ``max_np`` with
+    ``fits=False`` -- shard as hard as the mesh allows.
+    """
+    hbm = hierarchy.find("HBM") or hierarchy
+    budget = hbm.per_core_size()
+    granule = hbm.cache_line_size or 8 * 128 * 4
+    phi = make_phi_mesh()
+    dists = [Array1DDistribution(length=max(1, sharded_bytes), element_size=1)]
+    if replicated_bytes:
+        dists.append(ReplicatedDistribution(replicated_bytes))
+    try:
+        np_ = find_optimal_np(budget, granule, dists, 1, phi, max_np=max_np)
+        fits = True
+    except NoValidDecomposition:
+        np_, fits = max_np, False
+    return MeshDecomposition(
+        np=np_, budget_bytes=budget, granule_bytes=granule,
+        sharded_bytes=sharded_bytes, replicated_bytes=replicated_bytes,
+        fits=fits,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Rule construction
+# ---------------------------------------------------------------------------
+
+
+def _axis_sizes(mesh) -> Dict[str, int]:
+    return dict(mesh.shape)
+
+
+def _data_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def default_rules(
+    mesh,
+    *,
+    state_bytes: int = 0,
+    act_bytes: int = 0,
+    hierarchy: Optional[MemoryLevel] = None,
+    seq_sharded: bool = False,
+) -> ShardingRules:
+    """Architecture-independent rules: TP over "model" for the structural
+    axes, batch over the data axes, and the FSDP / replicated choice made by
+    ``mesh_decomposition`` over ``state_bytes`` (0 bytes -> trivially fits
+    -> replicated)."""
+    sizes = _axis_sizes(mesh)
+    model_n = sizes.get("model", 1)
+    data = _data_axes(mesh)
+    fsdp_capacity = max(1, prod(sizes[a] for a in data))
+    hierarchy = hierarchy or mesh_hierarchy(mesh)
+    dec = mesh_decomposition(
+        hierarchy,
+        sharded_bytes=state_bytes // max(1, model_n),
+        replicated_bytes=act_bytes,
+        max_np=fsdp_capacity,
+    )
+    embed_rule: AxisRule = None
+    if not dec.replicated and data:
+        embed_rule = data[0] if len(data) == 1 else data
+    param_rules: Dict[str, AxisRule] = {
+        "embed": embed_rule,
+        "heads": "model",
+        "mlp": "model",
+        "mlp_expert": "model",
+        "vocab": "model",
+        "experts": None,
+        "layers": None,
+    }
+    act_rules: Dict[str, AxisRule] = {
+        "batch": data[0] if len(data) == 1 else (data or None),
+        "seq": None,
+        "embed": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "kv_seq": "model" if seq_sharded else None,
+        "mlp": "model",
+        "experts": None,
+        "state_heads": "model",
+        "vocab": "model",
+        "layers": None,
+    }
+    return ShardingRules(param_rules, act_rules, meta={
+        "mesh_np": dec.np,
+        "mesh_budget_bytes": dec.budget_bytes,
+        "mesh_fits": dec.fits,
+        "fsdp": not dec.replicated,
+        "fsdp_capacity": fsdp_capacity,
+    })
+
+
+def arch_rules(
+    cfg: ModelConfig,
+    mesh,
+    seq_sharded: bool = False,
+    hierarchy: Optional[MemoryLevel] = None,
+    act_bytes: int = 0,
+    state_bytes_per_param: int = TRAIN_STATE_BYTES_PER_PARAM,
+) -> ShardingRules:
+    """Rules for one architecture on one mesh.
+
+    Structural (divisibility-driven) TP choices come from ``cfg``; the
+    memory-driven FSDP degree comes from the mesh-level decomposer run on
+    this architecture's resident-state footprint.  Pass ``hierarchy`` to
+    decompose against a different machine (tests shrink the HBM budget to
+    force the replicated -> FSDP flip); pass ``act_bytes`` to reserve
+    per-chip HBM for activations (they do not shrink with the param np);
+    pass ``state_bytes_per_param`` for non-training memory models (serving
+    holds only the bf16 weights, no master copy or optimizer moments).
+    """
+    sizes = _axis_sizes(mesh)
+    model_n = sizes.get("model", 1)
+    state_bytes = cfg.param_count() * state_bytes_per_param
+    rules = default_rules(
+        mesh,
+        state_bytes=state_bytes,
+        act_bytes=act_bytes,
+        hierarchy=hierarchy,
+        seq_sharded=seq_sharded,
+    )
+    pr, ar = dict(rules.param_rules), dict(rules.act_rules)
+
+    # Structural TP refinements: drop mesh axes the architecture cannot fill.
+    if cfg.n_heads % model_n != 0:
+        ar["heads"] = None
+    if cfg.n_kv_heads % model_n != 0:
+        ar["kv_heads"] = None
+    if cfg.vocab_size % model_n != 0:
+        pr["vocab"] = None
+        ar["vocab"] = None
+    if cfg.ssm is not None:
+        n_state_heads = (cfg.ssm.expand * cfg.d_model) // max(1, cfg.ssm.head_dim)
+        if n_state_heads % model_n != 0:
+            ar["state_heads"] = None
+    if cfg.moe is not None:
+        # Expert parallelism when the expert count fills the model axis
+        # (dispatch stays shard-local per expert group); tensor-parallel
+        # experts otherwise -- see models/moe.py for the measured rationale.
+        if cfg.moe.n_experts % model_n == 0 and model_n > 1:
+            pr["experts"] = "model"
+            pr["mlp_expert"] = None
+            ar["experts"] = "model"
+        else:
+            pr["experts"] = None
+            pr["mlp_expert"] = "model"
+            ar["experts"] = None
+    return ShardingRules(pr, ar, meta=rules.meta)
+
+
+def with_batch_guard(rules: ShardingRules, mesh, global_batch: int) -> ShardingRules:
+    """Trim the batch rule to the mesh axes whose product divides the global
+    batch (a batch that cannot split evenly replicates instead of erroring)."""
+    sizes = _axis_sizes(mesh)
+    kept: list = []
+    prod = 1
+    for a in _rule_axes(rules.act_rules.get("batch")):
+        size = sizes.get(a, 1)
+        if size and global_batch % (prod * size) == 0:
+            kept.append(a)
+            prod *= size
+    ar = dict(rules.act_rules)
+    ar["batch"] = None if not kept else (kept[0] if len(kept) == 1 else tuple(kept))
+    return ShardingRules(dict(rules.param_rules), ar, meta=dict(rules.meta))
+
+
+# ---------------------------------------------------------------------------
+# Shardings from rules
+# ---------------------------------------------------------------------------
+
+
+def _divisible_spec(spec: P, shape: Sequence[int], sizes: Dict[str, int]) -> P:
+    """Drop mesh axes from dims they do not divide evenly (per-tensor guard:
+    a 2-head KV projection on a 4-way model axis stays unsharded rather than
+    forcing GSPMD's padded uneven layout)."""
+    entries = []
+    for i, entry in enumerate(spec):
+        names = list(_rule_axes(entry))
+        while names and shape[i] % prod(sizes.get(n, 1) for n in names) != 0:
+            names.pop()
+        entries.append(None if not names else
+                       (names[0] if len(names) == 1 else tuple(names)))
+    return P(*entries)
+
+
+def logical_sharding(
+    mesh: Mesh,
+    rules: ShardingRules,
+    axes: Sequence[Optional[str]],
+    shape: Optional[Sequence[int]] = None,
+    kind: str = "param",
+) -> NamedSharding:
+    """NamedSharding for one tensor from its logical axes (with the
+    per-tensor divisibility guard when ``shape`` is known)."""
+    spec = rules.param_spec(axes) if kind == "param" else rules.act_spec(axes)
+    if shape is not None:
+        spec = _divisible_spec(spec, shape, _axis_sizes(mesh))
+    return NamedSharding(mesh, spec)
+
+
+def param_shardings(mesh: Mesh, rules: ShardingRules, specs: PyTree) -> PyTree:
+    """NamedSharding pytree matching a ``ParamSpec`` tree."""
+    from repro.models.params import spec_tree_map
+
+    return spec_tree_map(
+        lambda _, s: logical_sharding(mesh, rules, s.axes, s.shape, "param"),
+        specs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Active-rules context (constrain / active_rule inside model code)
+# ---------------------------------------------------------------------------
+
+
+_CTX = threading.local()
+
+
+def _active() -> Optional[Tuple[Mesh, ShardingRules]]:
+    stack = getattr(_CTX, "stack", None)
+    return stack[-1] if stack else None
+
+
+@contextmanager
+def use_mesh_rules(mesh: Mesh, rules: ShardingRules):
+    """Activate (mesh, rules) for ``constrain``/``active_rule`` in model code
+    traced under this context (trace-time scoping, like the paper's runtime
+    carrying the hierarchy through the decomposition)."""
+    stack = getattr(_CTX, "stack", None)
+    if stack is None:
+        stack = _CTX.stack = []
+    stack.append((mesh, rules))
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def active_rule(logical_axis: str) -> AxisRule:
+    """The mesh axes the active rules map ``logical_axis`` to (None outside
+    any ``use_mesh_rules`` context or for unmapped axes)."""
+    ctx = _active()
+    if ctx is None:
+        return None
+    return ctx[1].act_rules.get(logical_axis)
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """Pin ``x`` to the sharding its logical axes imply under the active
+    rules; the identity outside a ``use_mesh_rules`` context (single-host
+    smoke tests run the same model code unsharded)."""
+    ctx = _active()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = _divisible_spec(rules.act_spec(axes), x.shape, _axis_sizes(mesh))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -35,13 +35,15 @@ class TPUSpec:
     def usable_vmem(self) -> int:
         return self.vmem_bytes - self.vmem_reserved_bytes
 
-    def hierarchy(self) -> MemoryLevel:
-        """This chip in the paper's §3.1 JSON schema (HBM -> VMEM -> VREG)."""
+    def hierarchy(self, mesh_devices: int = 0) -> MemoryLevel:
+        """This chip in the paper's §3.1 JSON schema (HBM -> VMEM -> VREG);
+        with ``mesh_devices`` the mesh-extended ICI -> HBM -> ... chain."""
         return tpu_hierarchy(
             hbm_bytes=self.hbm_bytes,
             vmem_bytes=self.usable_vmem,
             lane_tile_bytes=self.sublane_bytes * self.lane,
             n_cores=self.num_cores,
+            mesh_devices=mesh_devices,
         )
 
     def sublane(self, dtype_bytes: int) -> int:

@@ -12,6 +12,7 @@ precomputed frame embeddings.
 
 from __future__ import annotations
 
+import math
 from typing import Any, Dict, Tuple
 
 import jax
@@ -116,6 +117,43 @@ def cache_logical_axes(cfg: ModelConfig, cache: Any, long_context: bool) -> Any:
         return axes_for(path, node)
 
     return walk(cache)
+
+
+def activation_footprint(cfg: ModelConfig, shape: ShapeConfig,
+                         remat: str = "full", dtype_bytes: int = 2) -> int:
+    """Rough global activation working-set bytes for one step.
+
+    Fed (divided by the chip count) into the mesh-level decomposer as the
+    *replicated* term of the phi_mesh domain: activations shard over the
+    batch axes, not over the FSDP partition count the search is choosing,
+    so they reserve HBM that parameter shards cannot use.  Counts the
+    residual stream per resident layer (all layers without remat, ~sqrt(L)
+    checkpoints with it), a 4x block working-set factor (qkv/ffn
+    intermediates), and the fp32 logits buffer.
+    """
+    # "full" remat keeps ~sqrt(L) checkpoints resident; "none" keeps every
+    # layer, and "dots" saves all dot outputs across all L layers, so both
+    # count the full depth.
+    resident_layers = (max(2, int(math.isqrt(max(1, cfg.n_layers))))
+                       if remat == "full" else cfg.n_layers)
+    tokens = shape.global_batch * shape.seq_len
+    stream = tokens * cfg.d_model * dtype_bytes * resident_layers * 4
+    logits = tokens * cfg.vocab_size * 4
+    return stream + logits
+
+
+def decode_footprint(cfg: ModelConfig, shape: ShapeConfig, max_len: int,
+                     dtype_bytes: int = 2) -> int:
+    """Rough global serving working-set bytes: the KV cache (the dominant
+    term -- latent for MLA, K+V heads otherwise) plus one layer's streaming
+    activations.  No backprop stash, no logits buffer held across steps."""
+    if cfg.mla is not None:
+        per_tok = cfg.mla.kv_lora_rank + cfg.mla.rope_head_dim
+    else:
+        per_tok = 2 * cfg.n_kv_heads * cfg.head_dim
+    cache = shape.global_batch * max_len * per_tok * dtype_bytes * cfg.n_layers
+    stream = shape.global_batch * shape.seq_len * cfg.d_model * dtype_bytes * 4
+    return cache + stream
 
 
 def make_batch(cfg: ModelConfig, shape: ShapeConfig, rng: np.random.Generator,

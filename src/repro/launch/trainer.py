@@ -36,9 +36,11 @@ from repro.dist.sharding import (
     with_batch_guard,
 )
 from repro.launch.specs import (
+    activation_footprint,
     batch_logical_axes,
     cache_logical_axes,
     decode_batch_specs,
+    decode_footprint,
     train_batch_specs,
 )
 from repro.models.model import Model, build_model
@@ -81,7 +83,17 @@ def make_train_step(
     rules: Optional[ShardingRules] = None,
     jit: bool = True,
 ) -> TrainStep:
-    rules = rules or arch_rules(cfg, mesh)
+    if rules is None:
+        # Mesh-level decomposition: the FSDP/replicated choice inside
+        # arch_rules runs Algorithm 1 against per-chip HBM, with this step's
+        # activation share reserved as the replicated phi term (see
+        # dist.sharding).  Activations shard over the data axes only -- the
+        # residual stream replicates across "model" -- so the reserve
+        # divides by the data extent.
+        data_n = max(1, mesh.size // dict(mesh.shape).get("model", 1))
+        rules = arch_rules(
+            cfg, mesh,
+            act_bytes=activation_footprint(cfg, shape, train.remat) // data_n)
     rules = with_batch_guard(rules, mesh, shape.global_batch)
     model = build_model(cfg, remat=train.remat)
     specs = model.param_specs()
@@ -228,7 +240,16 @@ def make_serve_steps(
         # Head sharding: attention local per head shard, no distributed
         # softmax; preferred whenever the head count divides the axis.
         long_context = False
-    rules = rules or arch_rules(cfg, mesh, seq_sharded=long_context)
+    if rules is None:
+        # Serving memory model: bf16 weights only (no master copy /
+        # moments), and the KV cache as the reserved term -- it shards over
+        # both the batch (data) and head (model) axes, so the global
+        # footprint divides by the full mesh.
+        rules = arch_rules(
+            cfg, mesh, seq_sharded=long_context,
+            state_bytes_per_param=2,
+            act_bytes=decode_footprint(
+                cfg, shape, shape.seq_len + max_len_extra) // mesh.size)
     rules = with_batch_guard(rules, mesh, shape.global_batch)
     if weights_tp_only:
         # Perf variant: serving replicates weights across the data axes

@@ -118,3 +118,39 @@ class TestSysfsReader:
         l2, l1 = caches
         assert l2.size == 1024 * 1024 and l2.cores_per_copy == 2
         assert l1.size == 32 * 1024 and l1.cores_per_copy == 1
+
+    def test_reader_hyperthread_siblings(self, tmp_path):
+        """System-I topology: hardware threads pair up on L1/L2 copies.
+
+        4 hardware threads, HT pairs (0,1) and (2,3) share an L1d and an L2;
+        all four share one L3.  Per-thread instruction caches must not leak
+        into the hierarchy, and the sibling groups must reflect the HT
+        pairing, not one group per thread.
+        """
+        ht_pair = {0: "0-1", 1: "0-1", 2: "2-3", 3: "2-3"}
+        for cpu in range(4):
+            entries = [
+                (1, "32K", "Data", ht_pair[cpu]),
+                (1, "32K", "Instruction", str(cpu)),
+                (2, "256K", "Unified", ht_pair[cpu]),
+                (3, "8192K", "Unified", "0-3"),
+            ]
+            for idx, (lvl, size, typ, shared) in enumerate(entries):
+                d = tmp_path / f"cpu{cpu}" / "cache" / f"index{idx}"
+                d.mkdir(parents=True)
+                (d / "level").write_text(str(lvl))
+                (d / "size").write_text(size)
+                (d / "type").write_text(typ)
+                (d / "coherency_line_size").write_text("64")
+                (d / "shared_cpu_list").write_text(shared)
+        h = read_linux_hierarchy(str(tmp_path))
+        l3, l2, l1 = h.cache_levels()
+        assert l1.siblings == [[0, 1], [2, 3]]
+        assert l1.cores_per_copy == 2 and l1.n_cores == 4
+        assert l2.siblings == [[0, 1], [2, 3]]
+        assert l3.siblings == [[0, 1, 2, 3]] and l3.size == 8192 * 1024
+        # The per-thread instruction caches were skipped entirely: no level
+        # with singleton sibling groups exists.
+        assert all(len(g) > 1 for lvl in (l1, l2, l3) for g in lvl.siblings)
+        # Affinity helper: the innermost shared level is the HT-pair L1.
+        assert h.lowest_shared_cache() is l1
