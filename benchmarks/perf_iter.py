@@ -21,6 +21,10 @@ Variants (composable, comma-separated):
                       cache sharded, collectives move tiny logits instead
                       of the cache)
   opt_bf16         -- optimizer moments in bf16 (halves optimizer traffic)
+  ring / serpentine -- route the TP matmuls through dist/overlap's ring
+                      (one ICI direction) or serpentine (both directions,
+                      half the per-link bytes) collective matmuls instead
+                      of GSPMD's default collectives (DESIGN.md §5)
 
 Usage:
   python -m benchmarks.perf_iter --arch deepseek-coder-33b --shape train_4k \
@@ -59,6 +63,8 @@ def run_variant(arch: str, shape_name: str, variants: list,
 
     if "blockwise_attn" in variants:
         cfg = dataclasses.replace(cfg, attn_blockwise_threshold=2048)
+    collectives = ("serpentine" if "serpentine" in variants
+                   else "ring" if "ring" in variants else "gspmd")
 
     t0 = time.time()
     if shape.kind == "train":
@@ -66,6 +72,7 @@ def run_variant(arch: str, shape_name: str, variants: list,
             remat="dots" if "remat_dots" in variants else "full",
             optimizer_dtype="bfloat16" if "opt_bf16" in variants
             else "float32",
+            collectives=collectives,
         )
         ts = make_train_step(cfg, shape, mesh, train, jit=True)
         p_abs = ts.model.abstract_params(jnp.float32)
@@ -82,6 +89,7 @@ def run_variant(arch: str, shape_name: str, variants: list,
             cache_head_sharded="cache_head_shard" in variants,
             cache_seq_sharded="cache_seq_shard" in variants,
             cache_policy="auto" if "auto_cache" in variants else "baseline",
+            collectives=collectives,
         )
         p_abs = ss.model.abstract_params(jnp.float32)
         if shape.kind == "prefill":

@@ -9,13 +9,24 @@ Prints ``name,us_per_call,derived`` CSV lines.
   fig11    -- cluster-level scaling model (Fig. 11)
   roofline -- §Roofline summary of every dry-run cell (single-pod)
   plans    -- decomposer tile plans for the TPU kernels (DESIGN.md §2)
+  collectives -- A/B per-step timings of the overlap layer's matmuls
+             (gspmd vs ring vs serpentine, DESIGN.md §5; needs >= 2
+             devices -- force them with
+             XLA_FLAGS=--xla_force_host_platform_device_count=4)
 
-Usage: ``python -m benchmarks.run [--quick] [--only table3,roofline]``
+Usage: ``python -m benchmarks.run [--quick] [--only table3,roofline]
+                                  [--collectives gspmd|ring|serpentine]``
+
+``--collectives`` with ``--dry`` prints the plan-time ring schedule (one
+line per step showing the ppermute(s) it issues -- both directions under
+serpentine) and, when devices allow, the collective-permute count of the
+lowered HLO.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -146,6 +157,110 @@ def plans(quick: bool) -> list:
     return out
 
 
+def collectives_plan(mode: str) -> list:
+    """--collectives=ring|serpentine under --dry: the plan-time ring
+    schedule, one line per step showing the ppermute(s) it issues (forward
+    AND backward under serpentine), plus -- when the host exposes >= 2
+    devices (CI forces 4) -- the collective-permute count of the lowered
+    kernels (DESIGN.md §5)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.dist.overlap import make_ag_matmul, make_rs_matmul, plan_ring
+
+    n_dev = jax.device_count()
+    p = n_dev if n_dev >= 2 else 4
+    plan = plan_ring(p, mode)
+    out = []
+    for s, desc in enumerate(plan.describe()):
+        out.append(f"ring_plan_{mode}_step{s},0,{desc}")
+    if n_dev < 2:
+        out.append(f"ring_hlo_{mode},0,skipped=1 device "
+                   "(set XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+        return out
+    mesh = jax.make_mesh((p,), ("model",))
+    x = jax.ShapeDtypeStruct((4 * p, 2 * p), jnp.float32)
+    w = jax.ShapeDtypeStruct((2 * p, 2 * p), jnp.float32)
+    for kind, make in (("ag", make_ag_matmul), ("rs", make_rs_matmul)):
+        fn = make(mesh, axis="model", mode=mode)
+        mlir = fn.lower(x, w).as_text()
+        # One collective_permute per ICI direction in the ring-step body:
+        # 1 under ring, 2 under serpentine (the both-direction evidence).
+        out.append(f"ring_hlo_{kind}_{mode},0,devices={p};"
+                   f"collective_permutes={mlir.count('collective_permute')};"
+                   f"directions={2 if mode == 'serpentine' else 1}")
+    return out
+
+
+#: Set from --collectives in main(): "gspmd" benches all three schedules,
+#: "ring"/"serpentine" restrict the A/B to gspmd vs that schedule.
+_AB_MODE = "gspmd"
+
+
+def collectives_bench(quick: bool) -> list:
+    """§Perf A/B: per-step timings of one TP projection under gspmd (XLA's
+    own collectives), the ring, and the serpentine overlap matmuls
+    (DESIGN.md §5), next to the estimated per-link wire bytes
+    (``launch.specs.overlap_wire_bytes``).  Needs >= 2 devices;
+    ``--collectives`` narrows the comparison to gspmd vs one schedule."""
+    import statistics
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.dist.overlap import make_ag_matmul, make_rs_matmul
+    from repro.launch.specs import overlap_wire_bytes
+
+    n_dev = jax.device_count()
+    if n_dev < 2:
+        return ["collectives_ab_skip,0,needs >=2 devices "
+                "(set XLA_FLAGS=--xla_force_host_platform_device_count=4)"]
+    p = n_dev
+    mesh = jax.make_mesh((p,), ("model",))
+    m = 256 if quick else 1024
+    k = n = 16 * p
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (m, k), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n), jnp.float32)
+    iters = 10 if quick else 30
+    fns = {
+        "ag_gspmd": jax.jit(
+            lambda a, b: a @ b,
+            in_shardings=(NamedSharding(mesh, P(None, "model")),
+                          NamedSharding(mesh, P(None, "model"))),
+            out_shardings=NamedSharding(mesh, P(None, "model"))),
+        "ag_ring": make_ag_matmul(mesh, "model", mode="ring"),
+        "ag_serpentine": make_ag_matmul(mesh, "model", mode="serpentine"),
+        "rs_gspmd": jax.jit(
+            lambda a, b: a @ b,
+            in_shardings=(NamedSharding(mesh, P(None, "model")),
+                          NamedSharding(mesh, P("model", None))),
+            out_shardings=NamedSharding(mesh, P("model", None))),
+        "rs_ring": make_rs_matmul(mesh, "model", mode="ring"),
+        "rs_serpentine": make_rs_matmul(mesh, "model", mode="serpentine"),
+    }
+    if _AB_MODE != "gspmd":
+        fns = {name: fn for name, fn in fns.items()
+               if name.endswith("_gspmd") or name.endswith(f"_{_AB_MODE}")}
+    out = []
+    for name, fn in fns.items():
+        fn(x, w).block_until_ready()        # compile + warm
+        steps = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            fn(x, w).block_until_ready()
+            steps.append(time.perf_counter() - t0)
+        kind, _, mode = name.partition("_")
+        per_link = overlap_wire_bytes(
+            m, k, n, p, kind=kind,
+            mode=mode if mode in ("ring", "serpentine") else "ring",
+            dtype_bytes=4)
+        out.append(
+            f"collectives_ab_{name},{statistics.median(steps) * 1e6:.0f},"
+            f"p={p};min_us={min(steps) * 1e6:.0f};iters={iters};"
+            f"est_wire_bytes_per_link={per_link}")
+    return out
+
+
 SECTIONS = {
     "table3": table3,
     "table4": table4,
@@ -154,12 +269,14 @@ SECTIONS = {
     "fig11": fig11,
     "roofline": roofline,
     "plans": plans,
+    "collectives": collectives_bench,
 }
 
 
-def dry(_quick: bool) -> list:
+def dry(_quick: bool, collectives: str = "gspmd") -> list:
     """CI smoke: exercise the decomposer planning paths (chip and mesh
-    level) without running any timed benchmark loops."""
+    level) without running any timed benchmark loops.  With
+    ``--collectives`` also print the overlap layer's ring schedule."""
     from repro.configs import get_model_config
     from repro.dist.sharding import arch_rules, mesh_decomposition, mesh_hierarchy
     from jax.sharding import AbstractMesh
@@ -176,6 +293,8 @@ def dry(_quick: bool) -> list:
     dec = mesh_decomposition(mesh_hierarchy(mesh), sharded_bytes=1 << 40,
                              max_np=16)
     out.append(f"dry_mesh_decomposition_1TiB,0,np={dec.np};fits={dec.fits}")
+    if collectives != "gspmd":
+        out.extend(collectives_plan(collectives))
     return out
 
 
@@ -185,12 +304,26 @@ def main() -> None:
     ap.add_argument("--only", default="")
     ap.add_argument("--dry", action="store_true",
                     help="plan-only smoke run (CI): no timed benchmarks")
+    ap.add_argument("--collectives", default="gspmd",
+                    choices=("gspmd", "ring", "serpentine"),
+                    help="overlap-layer collective schedule (DESIGN.md §5): "
+                         "with --dry, print its ring plan + lowered-HLO "
+                         "permute count; with --only collectives, restrict "
+                         "the A/B to gspmd vs this schedule")
     args = ap.parse_args()
+    global _AB_MODE
+    _AB_MODE = args.collectives
+    if args.collectives != "gspmd":
+        # The ring needs >1 device to mean anything; force a 4-way host
+        # platform unless the caller already chose (must precede jax import,
+        # which only the section bodies perform).
+        os.environ.setdefault(
+            "XLA_FLAGS", "--xla_force_host_platform_device_count=4")
     if args.dry:
         # CI gate: unlike the benchmark sections below, failures here must
         # propagate to a nonzero exit, not become an _ERROR CSV row.
         print("name,us_per_call,derived")
-        for line in dry(args.quick):
+        for line in dry(args.quick, args.collectives):
             print(line)
         return
     names = args.only.split(",") if args.only else list(SECTIONS)

@@ -20,4 +20,11 @@ python -m pytest -x -q "$@"
 echo "== smoke: benchmark harness (--dry) =="
 python -m benchmarks.run --dry
 
+echo "== smoke: overlap collectives (--dry, 4 host devices) =="
+# Exercise the serpentine ring path end to end on every run: the forced
+# 4-device host mesh lets the plan printout AND the lowered HLO (both
+# ppermute directions) come from a real mesh, not a degenerate one.
+XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+    python -m benchmarks.run --dry --collectives=serpentine
+
 echo "CI OK"

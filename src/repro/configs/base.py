@@ -279,6 +279,10 @@ class TrainConfig:
     microbatches: int = 1         # gradient accumulation
     optimizer_dtype: str = "float32"   # float32 | bfloat16 state compression
     grad_compression: str = "none"     # none | bf16 | int8_ef
+    # Collective-matmul schedule for the TP projections (DESIGN.md §5):
+    # gspmd (XLA's defaults) | ring | serpentine | auto (serpentine when the
+    # mesh decomposer chose FSDP -- the interconnect-bound regime).
+    collectives: str = "gspmd"
     seed: int = 0
     checkpoint_every: int = 100
     checkpoint_dir: str = "/tmp/repro_ckpt"

@@ -45,6 +45,7 @@ from repro.core.schedule import (
     cc_worker_tasks,
     grid_order,
     lowest_level_shared_cache_groups,
+    ring_stream_order,
     srrc_cluster_size,
     srrc_schedule,
     srrc_worker_tasks,

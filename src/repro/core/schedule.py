@@ -184,6 +184,45 @@ def lowest_level_shared_cache_groups(hierarchy) -> List[List[int]]:
 
 
 # ---------------------------------------------------------------------------
+# Ring streaming order (DESIGN.md §5: CC / SRRC -> interconnect schedule)
+# ---------------------------------------------------------------------------
+
+def ring_stream_order(p: int, strategy: str = "cc") -> List[Tuple[int, ...]]:
+    """Per-step chunk-owner offsets for streaming a ``p``-chunk ring.
+
+    The mesh-level analogue of the CC/SRRC choice (DESIGN.md §5): a ring
+    collective visits every chip's chunk once, and the *order* of visits is
+    a schedule over the interconnect exactly as ``grid_order`` is one over a
+    Pallas grid.  Offsets are relative to the consuming rank: at step ``s``
+    a chip holds the chunk originally owned by ``(rank - offset) % p``.
+
+      * ``cc``   -- one ICI direction: ``[(0,), (1,), ..., (p-1,)]``; the
+                    single resident chunk hops forward each step (the
+                    contiguous order of §2.2.1).
+      * ``srrc`` -- serpentine, both ICI directions concurrently:
+                    ``[(s, -s mod p) for s]``; each step consumes the
+                    forward half-chunk of ``rank - s`` and the backward
+                    half-chunk of ``rank + s``, so consecutive visits
+                    alternate sides of the consumer the way §2.2.2's
+                    serpentine traversal alternates row direction -- and
+                    both interconnect directions carry traffic every step.
+
+    Returns one tuple per step: length-1 under ``cc``, length-2
+    ``(fwd_offset, bwd_offset)`` under ``srrc``.  Each direction covers all
+    ``p`` offsets exactly once and advances one hop per step (the only
+    orders a physical ring can realize); ``repro.dist.overlap.plan_ring``
+    turns this into concrete ``ppermute`` permutation lists at plan time.
+    """
+    if p < 1:
+        raise ValueError(f"ring needs p >= 1, got {p}")
+    if strategy == "cc":
+        return [(s,) for s in range(p)]
+    if strategy == "srrc":
+        return [(s, (-s) % p) for s in range(p)]
+    raise ValueError(f"unknown strategy {strategy!r} (one of 'cc', 'srrc')")
+
+
+# ---------------------------------------------------------------------------
 # TPU grid traversal (DESIGN.md §2: CC / SRRC -> grid order)
 # ---------------------------------------------------------------------------
 

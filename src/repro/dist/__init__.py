@@ -7,15 +7,26 @@ package applies the same machinery one level further out (DESIGN.md §2):
   * ``sharding``  -- logical-axis sharding rules where the FSDP / TP /
     replicated choice is made by ``Decomposer``/``find_optimal_np`` with
     ``phi_mesh`` against the per-chip HBM budget, not by a hard-coded table.
-  * ``overlap``   -- ring all-gather / reduce-scatter matmuls that stream
-    mesh-level partitions over the interconnect while the previous one is on
-    the MXU (the CC/SRRC "compute the resident partition while fetching the
-    next" idea lifted to the ICI).
+  * ``overlap``   -- ring / serpentine all-gather and reduce-scatter
+    matmuls that stream mesh-level partitions over the interconnect while
+    the previous one is on the MXU (the CC/SRRC "compute the resident
+    partition while fetching the next" idea lifted to the ICI; the
+    serpentine mode drives both ICI directions at once -- DESIGN.md §5).
   * ``pipeline``  -- GPipe-style microbatch schedule over a mesh axis.
 """
 
+from repro.dist.overlap import (  # noqa: F401
+    RingPlan,
+    make_ag_matmul,
+    make_rs_matmul,
+    overlap_matmul,
+    plan_ring,
+)
+from repro.dist.pipeline import make_pipeline  # noqa: F401
 from repro.dist.sharding import (  # noqa: F401
+    COLLECTIVES,
     ShardingRules,
+    active_overlap,
     active_rule,
     arch_rules,
     constrain,
@@ -25,17 +36,27 @@ from repro.dist.sharding import (  # noqa: F401
     param_shardings,
     use_mesh_rules,
     with_batch_guard,
+    with_collectives,
 )
 
 __all__ = [
+    "COLLECTIVES",
+    "RingPlan",
     "ShardingRules",
+    "active_overlap",
     "active_rule",
     "arch_rules",
     "constrain",
     "default_rules",
     "logical_sharding",
+    "make_ag_matmul",
+    "make_pipeline",
+    "make_rs_matmul",
     "mesh_decomposition",
+    "overlap_matmul",
     "param_shardings",
+    "plan_ring",
     "use_mesh_rules",
     "with_batch_guard",
+    "with_collectives",
 ]

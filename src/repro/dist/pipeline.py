@@ -8,7 +8,8 @@ classic GPipe trapezoid -- and every chip computes its stage for a
 different microbatch at every interior step, so the per-step permute (one
 microbatch of activations over the interconnect) overlaps the stage
 compute, the same partition-streaming idea the chip level applies to
-HBM->VMEM block copies.
+HBM->VMEM block copies.  DESIGN.md §5 places this schedule next to the
+ring/serpentine collective matmuls of ``dist.overlap``.
 """
 
 from __future__ import annotations
@@ -25,13 +26,16 @@ PyTree = Any
 
 def make_pipeline(mesh: Mesh, stage_fn: Callable[[PyTree, jax.Array], jax.Array],
                   axis: str = "pod"):
-    """Build ``fn(stage_params, microbatches) -> outputs``.
+    """Build ``fn(stage_params, microbatches) -> outputs`` (DESIGN.md §5).
 
     ``stage_params`` is a pytree whose leaves carry a leading stage
     dimension equal to the ``axis`` size; ``microbatches`` is an
     ``(n_microbatches, ...)`` stack.  The result equals applying the stages
     sequentially to every microbatch (stage order = position along the mesh
-    axis); shapes must be stage-invariant (GPipe homogeneity).
+    axis); shapes must be stage-invariant (GPipe homogeneity).  Like the
+    ring matmuls, the per-step ``ppermute`` hop is independent of the
+    stage compute, so XLA overlaps transfer with work -- the GPipe
+    trapezoid is the CC partition stream with stages as partitions.
     """
     n_stages = dict(mesh.shape)[axis]
     perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]

@@ -49,6 +49,11 @@ PyTree = Any
 #: AdamW mu + nu (fp32 default), and the bf16 compute cast made each step.
 TRAIN_STATE_BYTES_PER_PARAM = 4 + 4 + 4 + 2
 
+#: Collective-matmul schedules the rules may request (DESIGN.md §5):
+#: "gspmd" leaves collectives to XLA; "ring"/"serpentine" route the
+#: tensor-parallel projections through ``dist.overlap``'s streaming matmuls.
+COLLECTIVES = ("gspmd", "ring", "serpentine")
+
 
 # ---------------------------------------------------------------------------
 # Rules table
@@ -291,6 +296,26 @@ def arch_rules(
     return ShardingRules(pr, ar, meta=rules.meta)
 
 
+def with_collectives(rules: ShardingRules, mode: str,
+                     axis: str = "model") -> ShardingRules:
+    """Request ring/serpentine overlap collectives for the TP projections
+    (DESIGN.md §5).
+
+    The choice rides in ``rules.meta`` so it scopes exactly like the rules
+    themselves: model code traced under ``use_mesh_rules(mesh, rules)``
+    sees it through ``active_overlap`` and routes its matmuls through
+    ``dist.overlap``; the same code under plain rules stays on GSPMD's
+    default collectives.  ``axis`` names the mesh axis the ring runs over.
+    """
+    if mode not in COLLECTIVES:
+        raise ValueError(f"unknown collectives {mode!r}; one of {COLLECTIVES}")
+    meta = dict(rules.meta)
+    meta["collectives"] = mode
+    meta["overlap_axis"] = axis
+    return ShardingRules(dict(rules.param_rules), dict(rules.act_rules),
+                         meta=meta)
+
+
 def with_batch_guard(rules: ShardingRules, mesh, global_batch: int) -> ShardingRules:
     """Trim the batch rule to the mesh axes whose product divides the global
     batch (a batch that cannot split evenly replicates instead of erroring)."""
@@ -386,6 +411,33 @@ def active_rule(logical_axis: str) -> AxisRule:
     if ctx is None:
         return None
     return ctx[1].act_rules.get(logical_axis)
+
+
+def active_overlap() -> Optional[Tuple[Mesh, str, str, Tuple[str, ...]]]:
+    """The overlap-collectives request of the active rules (DESIGN.md §5).
+
+    Returns ``(mesh, axis, mode, batch_axes)`` when the rules traced under
+    ``use_mesh_rules`` carry a ``with_collectives`` request and the ring
+    axis actually exists with size > 1; None under GSPMD rules, outside any
+    context, or on a degenerate axis.  ``batch_axes`` are the mesh axes the
+    activations' batch dim shards over -- ``dist.overlap`` keeps the
+    leading matmul dim sharded over them so routing never gathers the
+    batch.
+    """
+    ctx = _active()
+    if ctx is None:
+        return None
+    mesh, rules = ctx
+    mode = rules.meta.get("collectives", "gspmd")
+    if mode == "gspmd":
+        return None
+    axis = rules.meta.get("overlap_axis", "model")
+    sizes = _axis_sizes(mesh)
+    if sizes.get(axis, 1) <= 1:
+        return None
+    batch = tuple(a for a in _rule_axes(rules.act_rules.get("batch"))
+                  if a != axis and sizes.get(a, 1) > 1)
+    return mesh, axis, mode, batch
 
 
 def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:

@@ -142,6 +142,29 @@ def activation_footprint(cfg: ModelConfig, shape: ShapeConfig,
     return stream + logits
 
 
+def overlap_wire_bytes(m: int, k: int, n: int, p: int, kind: str = "ag",
+                       mode: str = "ring", dtype_bytes: int = 2) -> int:
+    """Per-ring-step bytes one ICI link carries for a ``(m, k) @ (k, n)``
+    projection under the overlap layer (DESIGN.md §5).
+
+    The hopping payload differs by kernel: the all-gather ring forwards the
+    resident ``(m, k/p)`` activation chunk, the reduce-scatter ring the
+    ``(m/p, n)`` partial-sum accumulator.  The serpentine schedule splits
+    either across both link directions, halving the per-link payload --
+    the quantity the §Perf A/B in ``benchmarks/run.py`` reports next to
+    its measured step times.  For a model's residual projection,
+    ``m = global_batch * seq_len`` and ``k = d_model``.
+    """
+    p = max(1, p)
+    if kind == "ag":
+        payload = m * (k // p) * dtype_bytes
+    elif kind == "rs":
+        payload = (m // p) * n * dtype_bytes
+    else:
+        raise ValueError(f"kind must be 'ag' or 'rs', got {kind!r}")
+    return payload // 2 if mode == "serpentine" else payload
+
+
 def decode_footprint(cfg: ModelConfig, shape: ShapeConfig, max_len: int,
                      dtype_bytes: int = 2) -> int:
     """Rough global serving working-set bytes: the KV cache (the dominant

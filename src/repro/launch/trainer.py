@@ -34,6 +34,7 @@ from repro.dist.sharding import (
     param_shardings,
     use_mesh_rules,
     with_batch_guard,
+    with_collectives,
 )
 from repro.launch.specs import (
     activation_footprint,
@@ -59,6 +60,22 @@ PyTree = Any
 def _dtype(name: str):
     return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
             "float16": jnp.float16}[name]
+
+
+def _apply_collectives(rules: ShardingRules, mode: str) -> ShardingRules:
+    """Resolve a collectives request against the mesh decomposition.
+
+    "auto" enables the serpentine overlap exactly when the mesh-level
+    decomposer chose FSDP (``rules.meta["fsdp"]``): that is the regime where
+    every step re-gathers parameter shards over the wire, so hiding the
+    transfers behind the ring matmuls pays (DESIGN.md §5).  Explicit
+    "ring"/"serpentine" always apply; "gspmd" leaves XLA's defaults.
+    """
+    if mode == "auto":
+        mode = "serpentine" if rules.meta.get("fsdp") else "gspmd"
+    if mode != "gspmd":
+        rules = with_collectives(rules, mode)
+    return rules
 
 
 # ---------------------------------------------------------------------------
@@ -95,6 +112,7 @@ def make_train_step(
             cfg, mesh,
             act_bytes=activation_footprint(cfg, shape, train.remat) // data_n)
     rules = with_batch_guard(rules, mesh, shape.global_batch)
+    rules = _apply_collectives(rules, train.collectives)
     model = build_model(cfg, remat=train.remat)
     specs = model.param_specs()
     p_shard = param_shardings(mesh, rules, specs)
@@ -217,6 +235,7 @@ def make_serve_steps(
     cache_head_sharded: bool = False,
     cache_seq_sharded: bool = False,
     cache_policy: str = "auto",
+    collectives: str = "gspmd",
 ) -> ServeSteps:
     """Serve-step factory. ``cache_policy="auto"`` applies the §Perf-winning
     placement: shard the KV cache over heads when kv_heads divides the
@@ -251,12 +270,13 @@ def make_serve_steps(
             act_bytes=decode_footprint(
                 cfg, shape, shape.seq_len + max_len_extra) // mesh.size)
     rules = with_batch_guard(rules, mesh, shape.global_batch)
+    rules = _apply_collectives(rules, collectives)
     if weights_tp_only:
         # Perf variant: serving replicates weights across the data axes
         # (memory permitting) so no per-step FSDP all-gather is emitted.
         pr = dict(rules.param_rules)
         pr["embed"] = None
-        rules = ShardingRules(pr, dict(rules.act_rules))
+        rules = ShardingRules(pr, dict(rules.act_rules), meta=dict(rules.meta))
     model = build_model(cfg, remat="none")
     specs = model.param_specs()
     p_shard = param_shardings(mesh, rules, specs)

@@ -7,6 +7,11 @@ All functions are pure; parameters arrive as pytrees produced from
 blocks with the paper's decomposer (``core.autotile.plan_attention``) so
 long-context attention streams VMEM-sized KV partitions -- the TPU
 realization of the paper's partition streams (Fig. 2).
+
+Every tensor-parallel projection (attention q/k/v/o, the SwiGLU FFN, the
+LM head) goes through ``tp_matmul``, which routes to the overlap layer's
+ring/serpentine collective matmuls when the active sharding rules request
+them (DESIGN.md §5) and stays a plain einsum otherwise.
 """
 
 from __future__ import annotations
@@ -20,6 +25,31 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.params import ParamSpec
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel projection dispatch (DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+
+def tp_matmul(x: jax.Array, w: jax.Array, parallel: str) -> jax.Array:
+    """Projection ``y = x @ w`` over the last dim, overlap-aware.
+
+    When the active sharding rules request ring/serpentine collectives
+    (``dist.sharding.with_collectives``), the matmul is routed through
+    ``dist.overlap``'s streaming kernels so the interconnect transfer of
+    the next mesh partition overlaps the current block's compute; under
+    GSPMD rules, outside any ``use_mesh_rules`` context, or when the shapes
+    do not divide the ring, it is a plain einsum.  ``parallel`` is the
+    weight's TP orientation: "column" (n sharded -> all-gather ring) or
+    "row" (k sharded -> reduce-scatter ring).
+    """
+    from repro.dist.overlap import overlap_matmul
+
+    y = overlap_matmul(x, w, parallel)
+    if y is None:
+        y = jnp.einsum("...k,kn->...n", x, w)
+    return y
+
 
 # ---------------------------------------------------------------------------
 # Norms
@@ -330,9 +360,9 @@ def attention_block(
 ) -> Tuple[jax.Array, Optional[dict]]:
     b, s, d = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    q = jnp.einsum("bsd,de->bse", x, params["wq"].astype(x.dtype))
-    k = jnp.einsum("bsd,de->bse", x, params["wk"].astype(x.dtype))
-    v = jnp.einsum("bsd,de->bse", x, params["wv"].astype(x.dtype))
+    q = tp_matmul(x, params["wq"].astype(x.dtype), "column")
+    k = tp_matmul(x, params["wk"].astype(x.dtype), "column")
+    v = tp_matmul(x, params["wv"].astype(x.dtype), "column")
     if cfg.qkv_bias:
         q = q + params["bq"].astype(x.dtype)
         k = k + params["bk"].astype(x.dtype)
@@ -377,7 +407,7 @@ def attention_block(
             # lives at slot p mod w).
             out = attention_op(q, k, v, q_pos, k_pos, cfg, causal=causal)
             out = out.reshape(b, s, h * hd)
-            out = jnp.einsum("bse,ed->bsd", out, params["wo"].astype(x.dtype))
+            out = tp_matmul(out, params["wo"].astype(x.dtype), "row")
             if s >= w:
                 tail_k, tail_v = k[:, s - w:], v[:, s - w:]
                 if ring:
@@ -395,7 +425,7 @@ def attention_block(
 
     out = attention_op(q, k, v, q_pos, k_pos, cfg, causal=causal, kv_len=kv_len)
     out = out.reshape(b, s, h * hd)
-    out = jnp.einsum("bse,ed->bsd", out, params["wo"].astype(x.dtype))
+    out = tp_matmul(out, params["wo"].astype(x.dtype), "row")
     return out, new_cache
 
 
@@ -417,8 +447,9 @@ def ffn_param_specs(cfg: ModelConfig, d_ff: Optional[int] = None, layers: int = 
 
 
 def swiglu_ffn(params: dict, x: jax.Array) -> jax.Array:
-    h = jax.nn.silu(x @ params["wg"].astype(x.dtype)) * (x @ params["wi"].astype(x.dtype))
-    return h @ params["wo"].astype(x.dtype)
+    g = tp_matmul(x, params["wg"].astype(x.dtype), "column")
+    u = tp_matmul(x, params["wi"].astype(x.dtype), "column")
+    return tp_matmul(jax.nn.silu(g) * u, params["wo"].astype(x.dtype), "row")
 
 
 # ---------------------------------------------------------------------------
@@ -453,7 +484,7 @@ def lm_logits(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     if cfg.tie_embeddings:
         logits = jnp.einsum("bsd,vd->bsv", x, params["embedding"].astype(x.dtype))
     else:
-        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+        logits = tp_matmul(x, params["lm_head"].astype(x.dtype), "column")
     if logits.shape[-1] != cfg.vocab_size:  # padded vocab: mask pad slots
         pad_mask = jnp.arange(logits.shape[-1]) < cfg.vocab_size
         logits = jnp.where(pad_mask, logits, NEG_INF)

@@ -397,19 +397,22 @@ class Model:
         return logits, jnp.zeros((), jnp.float32)
 
     def _cross_attn(self, cp, x, enc, q_pos, k_pos, kv=None):
-        """Cross attention; ``kv`` overrides (pre-projected cache)."""
+        """Cross attention; ``kv`` overrides (pre-projected cache).
+
+        Projections go through ``tp_matmul`` so the overlap layer's
+        ring/serpentine collectives apply here too (DESIGN.md §5)."""
         cfg = self.cfg
         b, s, d = x.shape
         h, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-        q = (x @ cp["wq"].astype(x.dtype)).reshape(b, s, h, hd)
+        q = L.tp_matmul(x, cp["wq"].astype(x.dtype), "column").reshape(b, s, h, hd)
         if kv is None:
-            k = (enc @ cp["wk"].astype(x.dtype)).reshape(b, -1, nkv, hd)
-            v = (enc @ cp["wv"].astype(x.dtype)).reshape(b, -1, nkv, hd)
+            k = L.tp_matmul(enc, cp["wk"].astype(x.dtype), "column").reshape(b, -1, nkv, hd)
+            v = L.tp_matmul(enc, cp["wv"].astype(x.dtype), "column").reshape(b, -1, nkv, hd)
         else:
             k, v = kv
         out = L.attention_op(q, k.astype(x.dtype), v.astype(x.dtype),
                              q_pos, k_pos, cfg, causal=False)
-        return out.reshape(b, s, h * hd) @ cp["wo"].astype(x.dtype)
+        return L.tp_matmul(out.reshape(b, s, h * hd), cp["wo"].astype(x.dtype), "row")
 
     # --------------------------------------------------------------- loss
     def loss(self, params: PyTree, batch: Dict[str, jax.Array],

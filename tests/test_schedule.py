@@ -193,3 +193,49 @@ class TestGridOrder:
         order = grid_order((gm, gn, gk), strategy)
         assert len(order) == gm * gn * gk
         assert len(set(order)) == len(order)
+
+
+# ---------------------------------------------------------------------------
+# Ring streaming order (DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+class TestRingStreamOrder:
+    def test_cc_single_direction(self):
+        from repro.core import ring_stream_order
+
+        order = ring_stream_order(4, "cc")
+        assert order == [(0,), (1,), (2,), (3,)]
+
+    def test_srrc_both_directions(self):
+        from repro.core import ring_stream_order
+
+        order = ring_stream_order(4, "srrc")
+        assert order == [(0, 0), (1, 3), (2, 2), (3, 1)]
+
+    @given(p=st.integers(min_value=1, max_value=16),
+           strategy=st.sampled_from(["cc", "srrc"]))
+    @settings(max_examples=60, deadline=None)
+    def test_each_direction_covers_and_is_ring_realizable(self, p, strategy):
+        from repro.core import ring_stream_order
+
+        order = ring_stream_order(p, strategy)
+        assert len(order) == p
+        width = 1 if strategy == "cc" else 2
+        assert all(len(step) == width for step in order)
+        for d in range(width):
+            offs = [step[d] for step in order]
+            # Full coverage: every chip's chunk is consumed exactly once.
+            assert sorted(offs) == list(range(p))
+            # Realizable on a physical ring: one hop per step, and the two
+            # directions hop opposite ways.
+            hop = 1 if d == 0 else p - 1
+            assert all((offs[s + 1] - offs[s]) % p == hop
+                       for s in range(p - 1))
+
+    def test_unknown_strategy_raises(self):
+        import pytest
+
+        from repro.core import ring_stream_order
+
+        with pytest.raises(ValueError):
+            ring_stream_order(4, "zigzag")
