@@ -157,6 +157,46 @@ def plans(quick: bool) -> list:
     return out
 
 
+#: Set from --hosts / --chips in main(): the forced hierarchy the "plan"
+#: section walks (CI runs a 2-host x 4-chip dry plan on every run).
+_PLAN_HOSTS = 1
+_PLAN_CHIPS = 8
+
+
+def plan_tree(quick: bool) -> list:
+    """--only plan: the full hierarchical plan tree (``repro.plan``).
+
+    Walks ``plan_run`` over a ``--hosts`` x ``--chips`` TPU hierarchy --
+    DCN -> ICI/HBM -> VMEM -> VREG -- for a real architecture's training
+    state (with its per-arch phi_mesh ``overhead``) and for a synthetic
+    65 GiB state whose np* (5 on 16 GiB chips) is not a mesh-axis divisor,
+    so the printed tree demonstrates the FSDP degree quantization
+    (``np_raw=5 quantized=8``).  Pure planning: no jax, no timed loops.
+    """
+    from repro.configs import get_model_config
+    from repro.core.plan import Workload, plan_run
+    from repro.dist.sharding import TRAIN_STATE_BYTES_PER_PARAM
+    from repro.hw.tpu import chip_spec
+
+    del quick
+    spec = chip_spec()
+    hier = spec.hierarchy(mesh_devices=_PLAN_CHIPS, hosts=_PLAN_HOSTS)
+    out = []
+    cfg = get_model_config("llama3.2-1b")
+    hp = plan_run(hier, Workload(
+        state_bytes=cfg.param_count() * TRAIN_STATE_BYTES_PER_PARAM,
+        overhead=cfg.overhead,
+        matmul=(4096, cfg.d_model, cfg.d_ff),
+        dtype_bytes=2,
+    ))
+    for i, line in enumerate(hp.describe()):
+        out.append(f"plan_tree_{cfg.arch}_{i},0,{line}")
+    hp = plan_run(hier, Workload(state_bytes=65 << 30))
+    for i, line in enumerate(hp.describe()):
+        out.append(f"plan_tree_65GiB_state_{i},0,{line}")
+    return out
+
+
 def collectives_plan(mode: str) -> list:
     """--collectives=ring|serpentine under --dry: the plan-time ring
     schedule, one line per step showing the ppermute(s) it issues (forward
@@ -269,6 +309,7 @@ SECTIONS = {
     "fig11": fig11,
     "roofline": roofline,
     "plans": plans,
+    "plan": plan_tree,
     "collectives": collectives_bench,
 }
 
@@ -310,9 +351,16 @@ def main() -> None:
                          "with --dry, print its ring plan + lowered-HLO "
                          "permute count; with --only collectives, restrict "
                          "the A/B to gspmd vs this schedule")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="--only plan: hosts (DCN copies) of the forced "
+                         "hierarchy the plan tree is walked over")
+    ap.add_argument("--chips", type=int, default=8,
+                    help="--only plan: chips per host of the forced "
+                         "hierarchy")
     args = ap.parse_args()
-    global _AB_MODE
+    global _AB_MODE, _PLAN_HOSTS, _PLAN_CHIPS
     _AB_MODE = args.collectives
+    _PLAN_HOSTS, _PLAN_CHIPS = args.hosts, args.chips
     if args.collectives != "gspmd":
         # The ring needs >1 device to mean anything; force a 4-way host
         # platform unless the caller already chose (must precede jax import,

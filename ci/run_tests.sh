@@ -27,4 +27,16 @@ echo "== smoke: overlap collectives (--dry, 4 host devices) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=4" \
     python -m benchmarks.run --dry --collectives=serpentine
 
+echo "== smoke: hierarchical planner (forced 2-host x 4-chip dry plan) =="
+# The recursive planner (repro.plan) end to end on every run: the forced
+# DCN level must appear in the printed tree, and the synthetic 65 GiB
+# state (np*=5 on 16 GiB chips) must show the divisor-quantized FSDP
+# degree (5 -> 8 on the 8-chip extent).
+plan_out="$(python -m benchmarks.run --only plan --hosts 2 --chips 4)"
+printf '%s\n' "$plan_out"
+printf '%s\n' "$plan_out" | grep -q 'DCN\[mesh\]' \
+    || { echo "FAIL: plan tree is missing the DCN level"; exit 1; }
+printf '%s\n' "$plan_out" | grep -q 'np_raw=5 quantized=8' \
+    || { echo "FAIL: plan tree is missing the quantized FSDP degree"; exit 1; }
+
 echo "CI OK"

@@ -1,5 +1,6 @@
-"""Quickstart: the paper's cache-conscious run-time decomposition in 60
-lines -- decompose, schedule, execute, and the TPU tile-plan view.
+"""Quickstart: the paper's cache-conscious run-time decomposition in ~70
+lines -- one recursive planner (``repro.plan``) from the host caches to the
+device mesh, plus the execution engine and the TPU tile-plan view.
 
 Run: ``PYTHONPATH=src python examples/quickstart.py``
 """
@@ -7,18 +8,22 @@ Run: ``PYTHONPATH=src python examples/quickstart.py``
 import numpy as np
 
 from repro.core import (
-    Decomposer,
     Engine,
     matmul_domain,
     matmul_task_grid,
+    paper_system_a,
     read_linux_hierarchy,
 )
-from repro.core.autotile import plan_attention, plan_matmul
 from repro.hw import chip_spec
+from repro.plan import PlanPolicy, Workload, plan_run
 
 # ---------------------------------------------------------------- 1. detect
-# Platform-independent memory hierarchy (paper §3.1), straight from sysfs.
+# Platform-independent memory hierarchy (paper §3.1), straight from sysfs
+# (containers often hide the cache indexes; fall back to the paper's
+# System A so the walk below always has cache levels to plan against).
 hier = read_linux_hierarchy()
+if hier.find("L2") is None:
+    hier = paper_system_a()
 print("memory hierarchy:")
 for lvl in hier.levels():
     line = f"  {lvl.name:5s} {lvl.size / 1024:10.0f} KiB"
@@ -27,14 +32,17 @@ for lvl in hier.levels():
     print(line)
 
 # ------------------------------------------------------------- 2. decompose
-# MatMult 1024x1024 against the L2 TCL: Algorithm 1 + binary search pick np.
+# MatMult 1024x1024 against the L2 TCL: one plan_run call walks the
+# hierarchy and runs Algorithm 1 + the §2.1.1 binary search at the L2 level.
 n = 1024
-dec = Decomposer(hier, tcl="L2")
-plan = dec.decompose(matmul_domain(n, n, n, 4), n_workers=4)
-print(f"\ncache-conscious decomposition: np={plan.np} partitions, "
-      f"{plan.partition_bytes / 1024:.1f} KiB each "
-      f"(TCL={plan.tcl_bytes / 1024:.0f} KiB) -> "
-      f"{len(matmul_task_grid(plan.np))} tasks")
+domain = matmul_domain(n, n, n, 4)
+hp = plan_run(hier, Workload(domain=tuple(domain)),
+              PlanPolicy(tcl="L2", n_workers=4))
+l2 = hp.level("L2")
+print(f"\ncache-conscious decomposition: np={l2.np} partitions, "
+      f"{l2.partition_bytes / 1024:.1f} KiB each "
+      f"(TCL={l2.budget_bytes / 1024:.0f} KiB) -> "
+      f"{len(matmul_task_grid(l2.np))} tasks")
 
 # --------------------------------------------------------------- 3. execute
 rng = np.random.default_rng(0)
@@ -66,14 +74,24 @@ print(f"stage breakdown: decomp {res.times.decomposition * 1e3:.2f} ms, "
       f"exec {res.times.execution * 1e3:.2f} ms")
 
 # ------------------------------------------------------------ 4. TPU view
-# The same decomposition, targeting TPU v5e VMEM: the np search output IS
-# the Pallas BlockSpec plan (DESIGN.md §2).
+# The same decomposition targeting TPU v5e: plan_run on the chip hierarchy
+# turns the np search output into a Pallas BlockSpec plan (DESIGN.md §2).
 spec = chip_spec("tpu_v5e")
-mm = plan_matmul(8192, 8192, 8192, dtype_bytes=2, spec=spec)
+mm = plan_run(spec.hierarchy(),
+              Workload(matmul=(8192, 8192, 8192), dtype_bytes=2),
+              PlanPolicy(spec=spec)).tile_plan()
 print(f"\nTPU v5e matmul plan: blocks {mm.bm}x{mm.bk}x{mm.bn}, "
       f"grid {mm.grid}, est VMEM {mm.est_vmem_bytes / 2 ** 20:.1f} MiB "
       f"of {spec.usable_vmem / 2 ** 20:.0f} MiB budget")
-fa = plan_attention(32768, 32768, 128, dtype_bytes=2, spec=spec)
-print(f"TPU v5e attention plan: block_q={fa.block_q}, "
-      f"block_kv={fa.block_kv} (32k context streams in "
-      f"{fa.grid[1]} VMEM-sized partitions)")
+
+# ------------------------------------------- 5. the whole hierarchy at once
+# 2 hosts x 4 chips, 65 GiB of training state: the DCN level splits the
+# state across hosts, the ICI level picks the (divisor-quantized) FSDP
+# degree, and the VMEM leaf is the per-chip tile plan -- one plan_run.
+hp = plan_run(spec.hierarchy(mesh_devices=4, hosts=2),
+              Workload(state_bytes=65 << 30, matmul=(4096, 4096, 4096)),
+              PlanPolicy(spec=spec))
+print("\nhierarchical plan (2 hosts x 4 chips, 65 GiB state):")
+for line in hp.describe():
+    print("  " + line)
+print("serialized:", hp.to_json()[:60] + "...")

@@ -160,6 +160,10 @@ def mixtral_8x7b() -> ModelConfig:
         sliding_window=4096,
         rope_theta=1e6,
         moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=14336),
+        # MoE keeps per-expert gradient buckets + the dispatch gather
+        # destinations alive next to the resident shard -> larger phi_mesh
+        # transient factor (launch/dryrun.py --calibrate to refine).
+        overhead=1.25,
         source="arXiv:2401.04088",
     )
 
@@ -185,6 +189,8 @@ def deepseek_v2_236b() -> ModelConfig:
             n_experts=160, top_k=6, n_shared_experts=2, d_ff_expert=1536,
             first_k_dense=1, dense_d_ff=12288,
         ),
+        # See mixtral-8x7b: MoE transient buffers scale the phi_mesh estimate.
+        overhead=1.25,
         source="arXiv:2405.04434",
     )
 

@@ -91,6 +91,11 @@ class ModelConfig:
     # Perf knobs (cache-conscious attention: sequences >= threshold stream
     # decomposer-sized KV blocks instead of materializing (S, S) logits).
     attn_blockwise_threshold: int = 8192
+    # phi_mesh transient-copy factor for the mesh-level planner (repro.plan):
+    # >1 reserves HBM for the buffers the runtime keeps alive alongside the
+    # resident shard (gradient buckets, all-gather destinations); calibrate
+    # against dry-run HLO memory analysis via ``launch/dryrun.py --calibrate``.
+    overhead: float = 1.0
     moe: Optional[MoEConfig] = None
     mla: Optional[MLAConfig] = None
     ssm: Optional[SSMConfig] = None

@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from functools import lru_cache
 from typing import Optional, Tuple
 
 from repro.core.decompose import (
@@ -106,14 +105,43 @@ def plan_matmul(
 ) -> MatmulTilePlan:
     """Cache-conscious matmul tile plan via the paper's binary search.
 
+    A thin wrapper over the hierarchical planner (``repro.plan``): runs a
+    single-chip ``plan_run`` on this chip's HBM -> VMEM -> VREG hierarchy
+    and returns the VMEM sub-plan's tile plan.  The search itself
+    (``_search_matmul_tiles``) is what the planner executes at every VMEM
+    level, so a standalone ``plan_matmul`` and the leaf of a full mesh-wide
+    plan agree by construction:
+
     1. Run §2.1.1's search on the Fig. 3 composite domain (A, B, C square
        block grids) against the chip's usable VMEM with ``phi_tpu``.
     2. Convert np -> raw block extents and align them to MXU/lane multiples
        (the phi_c "cache line adjustment", TPU-style).
     3. Shrink-to-fit if alignment pushed the working set over budget.
     """
+    from repro.core.plan import PlanPolicy, Workload, plan_run
+
     spec = spec or chip_spec()
-    budget = int(spec.usable_vmem * vmem_fraction)
+    hp = plan_run(
+        spec.hierarchy(),
+        Workload(matmul=(m, k, n), dtype_bytes=dtype_bytes),
+        PlanPolicy(order=order, n_workers=n_workers,
+                   vmem_fraction=vmem_fraction, spec=spec),
+    )
+    return hp.tile_plan()
+
+
+def _search_matmul_tiles(
+    m: int,
+    k: int,
+    n: int,
+    dtype_bytes: int,
+    spec: TPUSpec,
+    order: str,
+    n_workers: int,
+    budget: int,
+) -> MatmulTilePlan:
+    """The §2.1.1 search + TPU alignment against an explicit VMEM budget
+    (the planner supplies the budget from the hierarchy's VMEM level)."""
     sub = spec.sublane(dtype_bytes)
     phi = make_phi_tpu(sublane=sub, lane=spec.lane, buffering=2)
 
@@ -156,7 +184,6 @@ def plan_matmul(
     )
 
 
-@lru_cache(maxsize=512)
 def plan_matmul_cached(
     m: int,
     k: int,
@@ -166,12 +193,13 @@ def plan_matmul_cached(
     n_workers: int = 1,
     vmem_fraction: float = 1.0,
 ) -> MatmulTilePlan:
-    """Memoized ``plan_matmul`` for callers that re-plan the same block shape
-    on every trace -- the ring overlap kernels (``repro.dist.overlap``) run
-    the search once per (local-shard shape, dtype) and reuse the plan for
-    every ring step and every subsequent retrace."""
-    return plan_matmul(m, k, n, dtype_bytes=dtype_bytes, order=order,
-                       n_workers=n_workers, vmem_fraction=vmem_fraction)
+    """Memoized plan for callers that re-plan the same block shape on every
+    trace.  Delegates to the hierarchical planner's single memoizer
+    (``repro.plan.leaf_matmul_plan``) so there is exactly one plan cache."""
+    from repro.core.plan import leaf_matmul_plan
+
+    return leaf_matmul_plan(m, k, n, dtype_bytes=dtype_bytes, order=order,
+                            n_workers=n_workers, vmem_fraction=vmem_fraction)
 
 
 def plan_matmul_horizontal(

@@ -276,6 +276,7 @@ class Decomposer:
         self.phi = phi
         self.strategy = strategy
         if isinstance(tcl, int):
+            self._tcl_name = None
             self.tcl_bytes = tcl
             self.cache_line = 64
             for lvl in hierarchy.cache_levels():
@@ -285,27 +286,44 @@ class Decomposer:
             lvl = hierarchy.find(tcl)
             if lvl is None:
                 raise KeyError(f"no level named {tcl!r} in hierarchy")
+            self._tcl_name = tcl
             self.tcl_bytes = lvl.per_core_size()
             self.cache_line = lvl.cache_line_size or 64
 
     def decompose(
         self, domain: Sequence[Distribution] | CompositeDomain, n_workers: int
     ) -> DecompositionPlan:
+        """Decompose one composite domain against this decomposer's TCL.
+
+        A thin wrapper over the hierarchical planner (``repro.plan``): runs
+        ``plan_run`` with the search restricted to the TCL level (an
+        explicit byte budget gets a synthetic single-level hierarchy) and
+        reads ``np`` off that level's sub-plan -- the same Algorithm-1 /
+        §2.1.1 search the planner executes at every host-cache level.
+        """
+        from repro.core.plan import PlanPolicy, Workload, plan_run
+
         dists = list(domain)
-        if self.strategy == "horizontal":
-            np_ = _next_structurally_valid(dists, max(1, n_workers), 1 << 30)
-            if np_ is None:
-                raise NoValidDecomposition("horizontal: nWorkers not admissible")
+        if self._tcl_name is not None:
+            hierarchy, tcl_name = self.hierarchy, self._tcl_name
         else:
-            np_ = find_optimal_np(
-                self.tcl_bytes, self.cache_line, dists, n_workers, self.phi
-            )
-        part_bytes = sum(self.phi(self.cache_line, d, np_) for d in dists)
+            hierarchy = MemoryLevel(
+                size=self.tcl_bytes, siblings=[[0]],
+                cache_line_size=self.cache_line, child=None, name="TCL")
+            tcl_name = "TCL"
+        hp = plan_run(
+            hierarchy,
+            Workload(domain=tuple(dists)),
+            PlanPolicy(strategy=self.strategy, n_workers=n_workers,
+                       cache_phi=self.phi, tcl=tcl_name),
+        )
+        sub = hp.level(tcl_name)
+        np_ = sub.np
         return DecompositionPlan(
             np=np_,
             tcl_bytes=self.tcl_bytes,
             cache_line_size=self.cache_line,
-            partition_bytes=part_bytes,
+            partition_bytes=sub.partition_bytes,
             regions=[d.partition(np_) for d in dists],
             strategy=self.strategy,
         )

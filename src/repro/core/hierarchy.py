@@ -248,6 +248,8 @@ def tpu_hierarchy(
     n_cores: int = 1,
     mesh_devices: int = 0,
     ici_bytes: Optional[int] = None,
+    hosts: int = 1,
+    dcn_bytes: Optional[int] = None,
 ) -> MemoryLevel:
     """TPU memory hierarchy in the paper's schema (DESIGN.md §2).
 
@@ -264,13 +266,24 @@ def tpu_hierarchy(
     role. The per-chip sub-hierarchy (VMEM/VREG) hangs below unchanged, so
     the same ``Decomposer``/``find_optimal_np`` machinery that sizes Pallas
     blocks against VMEM sizes parameter shards against per-chip HBM.
+
+    With ``hosts > 1`` the data-center network becomes one more level above
+    the ICI (DESIGN.md §6): each host's ICI domain (``mesh_devices`` chips)
+    is one *copy* of the DCN's target level, exactly as each chip's HBM is
+    one copy of the ICI's.  ``mesh_devices`` is then the per-host chip
+    count; the ``siblings`` of the ICI level group the global chip ids by
+    host.  The recursive planner (``repro.plan``) walks DCN -> ICI -> VMEM
+    -> VREG with the same Algorithm-1 search at every level.
     """
+    if hosts > 1 and mesh_devices <= 0:
+        raise ValueError("hosts > 1 requires mesh_devices > 0")
     cores = list(range(n_cores))
     vreg = MemoryLevel(1024, [[c] for c in cores], lane_tile_bytes, None, "VREG")
     vmem = MemoryLevel(vmem_bytes, [[c] for c in cores], lane_tile_bytes, vreg, "VMEM")
     if mesh_devices <= 0:
         return MemoryLevel(hbm_bytes, [cores], None, vmem, "HBM")
-    chips = list(range(mesh_devices))
+    hosts = max(1, hosts)
+    chips = list(range(hosts * mesh_devices))
     hbm = MemoryLevel(
         size=hbm_bytes,
         siblings=[[c] for c in chips],
@@ -278,10 +291,21 @@ def tpu_hierarchy(
         child=vmem,
         name="HBM",
     )
-    return MemoryLevel(
-        size=ici_bytes or mesh_devices * hbm_bytes,
-        siblings=[chips],
+    ici_size = ici_bytes or mesh_devices * hbm_bytes
+    ici = MemoryLevel(
+        size=ici_size,
+        siblings=[chips[h * mesh_devices:(h + 1) * mesh_devices]
+                  for h in range(hosts)],
         cache_line_size=None,
         child=hbm,
         name="ICI",
+    )
+    if hosts <= 1:
+        return ici
+    return MemoryLevel(
+        size=dcn_bytes or hosts * ici_size,
+        siblings=[chips],
+        cache_line_size=None,
+        child=ici,
+        name="DCN",
     )

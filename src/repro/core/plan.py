@@ -1,0 +1,549 @@
+"""``repro.plan`` -- one recursive planner for the whole memory hierarchy.
+
+The paper's contribution is a *run-time system* that decomposes a data
+parallel computation against the memory hierarchy.  This module is the
+single entry point that realizes it end to end: ``plan_run`` walks a
+``MemoryLevel`` tree from the outermost level inward and runs the paper's
+Algorithm-1 / §2.1.1 search once **per level**, with that level's phi:
+
+  ============  ==============  =====================================
+  level         phi             TCL (budget) of the search
+  ============  ==============  =====================================
+  DCN           ``phi_mesh``    one host's ICI domain (all its HBMs)
+  ICI           ``phi_mesh``    one chip's HBM
+  VMEM          ``phi_tpu``     the chip's usable VMEM (tile search)
+  L3/L2/L1      ``phi_simple``  the cache's per-core share
+                / ``phi_c``
+  ============  ==============  =====================================
+
+Each level's chosen ``np`` threads *down* as the next level's worker count
+(the search lower bound): the partition count is a single global quantity
+the walk refines level by level -- the paper's nested decomposition,
+realized as one API.  At interconnect (mesh) levels the raw ``np*`` is
+additionally *quantized* to the smallest mesh-axis divisor >= ``np*``
+(ROADMAP: FSDP degree quantization); both values are recorded in the
+sub-plan.
+
+The result is a ``HierarchicalPlan``: a serializable (``to_json`` /
+``from_json``) tree of per-level ``LevelPlan`` records that every consumer
+reads instead of re-planning -- ``dist.sharding`` derives the FSDP degree
+from the ICI sub-plan, ``dist.pipeline`` maps stages onto the DCN sub-plan,
+``dist.overlap`` / ``kernels.matmul_cc`` pull their ``MatmulTilePlan`` from
+the VMEM leaf, and ``benchmarks/run.py --only plan`` / ``launch/dryrun.py``
+print the full tree.
+
+The legacy entry points (``dist.sharding.mesh_decomposition``,
+``core.autotile.plan_matmul``, ``core.decompose.Decomposer.decompose``) are
+thin wrappers over single-level ``plan_run`` calls.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from functools import lru_cache
+from typing import Any, Dict, Iterator, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core.autotile import MatmulTilePlan
+from repro.core.decompose import (
+    NoValidDecomposition,
+    PhiFn,
+    _next_structurally_valid,
+    find_optimal_np,
+    make_phi_mesh,
+    phi_simple,
+    validate_np,
+)
+from repro.core.distribution import (
+    Array1DDistribution,
+    Distribution,
+    ReplicatedDistribution,
+)
+from repro.core.hierarchy import MemoryLevel
+
+__all__ = [
+    "MESH_LEVEL_NAMES",
+    "HierarchicalPlan",
+    "LevelPlan",
+    "PlanPolicy",
+    "Workload",
+    "leaf_matmul_plan",
+    "plan_run",
+    "quantize_divisor",
+]
+
+#: Interconnect level names: the level *below* holds the copies the search
+#: partitions against (per-host ICI domains under DCN, per-chip HBMs under
+#: ICI), so the budget is one child copy and np quantizes to its extent.
+MESH_LEVEL_NAMES = ("DCN", "ICI")
+
+#: Fallback sharding granule: one (sublane x lane) f32 register tile.
+DEFAULT_GRANULE = 8 * 128 * 4
+
+
+# ---------------------------------------------------------------------------
+# Inputs: what to plan (Workload) and how (PlanPolicy)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Workload:
+    """What is being decomposed, one description for every level.
+
+    ``state_bytes``/``replicated_bytes`` feed the interconnect levels (the
+    shardable training/serving state and the per-copy pinned reserve --
+    activations, non-shardable buffers).  ``matmul`` is the per-chip local
+    ``C[m,n] = A[m,k] @ B[k,n]`` the VMEM level tiles.  ``domain`` is a
+    paper-style ``Distribution`` composite for host-cache levels (the CPU
+    path).  ``overhead`` is the ``phi_mesh`` transient-copy factor
+    (gradient buckets, all-gather destinations -- ``ModelConfig.overhead``).
+    """
+
+    state_bytes: int = 0
+    replicated_bytes: int = 0
+    matmul: Optional[Tuple[int, int, int]] = None
+    dtype_bytes: int = 2
+    overhead: float = 1.0
+    domain: Optional[Tuple[Distribution, ...]] = None
+
+
+@dataclass(frozen=True)
+class PlanPolicy:
+    """How to search.
+
+    ``n_workers`` seeds the outermost level (1 allows full replication, the
+    mesh default); ``max_np`` caps a level's partition count by name (e.g.
+    the FSDP capacity of the data axes at "ICI"); ``quantize`` enables the
+    divisor quantization at mesh levels; ``tcl`` restricts the host-cache
+    search to one named level (the ``Decomposer`` wrapper -- other cache
+    levels become pass-through containers); ``cache_phi`` is the footprint
+    estimator for host-cache levels; ``spec`` carries the MXU/lane/sublane
+    alignment constants for the VMEM tile search.
+    """
+
+    strategy: str = "cache_conscious"   # | "horizontal"
+    n_workers: int = 1
+    quantize: bool = True
+    max_np: Mapping[str, int] = field(default_factory=dict)
+    tcl: Optional[str] = None
+    cache_phi: PhiFn = phi_simple
+    order: str = "cc"
+    vmem_fraction: float = 1.0
+    spec: Optional[Any] = None          # hw.tpu.TPUSpec
+
+
+# ---------------------------------------------------------------------------
+# Outputs: one LevelPlan per level, folded into a HierarchicalPlan tree
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LevelPlan:
+    """One level's share of the nested decomposition.
+
+    ``np_raw`` is the Algorithm-1 result; ``np`` the realized count after
+    divisor quantization (equal at non-mesh levels).  ``extent`` is the
+    realizable cap (child copies at mesh levels, 0 = unbounded at cache
+    levels).  ``detail`` is a JSON-safe, kind-specific payload (the tile
+    plan fields at VMEM, shard bytes at mesh levels).
+    """
+
+    level: str
+    kind: str                    # mesh | cache | tile | container | leaf
+    phi: str = ""
+    budget_bytes: int = 0
+    granule_bytes: int = 0
+    n_workers: int = 1
+    extent: int = 1
+    np_raw: int = 1
+    np: int = 1
+    partition_bytes: float = 0.0
+    fits: bool = True
+    detail: Mapping[str, Any] = field(default_factory=dict)
+
+    @property
+    def replicated(self) -> bool:
+        return self.np_raw <= 1
+
+
+_LEVEL_FIELDS = ("level", "kind", "phi", "budget_bytes", "granule_bytes",
+                 "n_workers", "extent", "np_raw", "np", "partition_bytes",
+                 "fits")
+
+
+@dataclass(frozen=True)
+class HierarchicalPlan:
+    """Serializable tree of per-level sub-plans (outermost level first)."""
+
+    plan: LevelPlan
+    child: Optional["HierarchicalPlan"] = None
+
+    # ------------------------------------------------------------- traversal
+    def nodes(self) -> Iterator["HierarchicalPlan"]:
+        node: Optional[HierarchicalPlan] = self
+        while node is not None:
+            yield node
+            node = node.child
+
+    def levels(self) -> List[LevelPlan]:
+        return [n.plan for n in self.nodes()]
+
+    def find(self, name: str) -> Optional["HierarchicalPlan"]:
+        for n in self.nodes():
+            if n.plan.level == name:
+                return n
+        return None
+
+    def level(self, name: str) -> Optional[LevelPlan]:
+        sub = self.find(name)
+        return sub.plan if sub is not None else None
+
+    def leaf(self) -> LevelPlan:
+        node = self
+        while node.child is not None:
+            node = node.child
+        return node.plan
+
+    def tile_plan(self) -> Optional[MatmulTilePlan]:
+        """The VMEM level's ``MatmulTilePlan`` (None if no tile level)."""
+        for lp in self.levels():
+            if lp.kind == "tile":
+                return MatmulTilePlan(**lp.detail["tile"])
+        return None
+
+    # ------------------------------------------------------------------ JSON
+    def to_dict(self) -> dict:
+        d: Dict[str, Any] = {f: getattr(self.plan, f) for f in _LEVEL_FIELDS}
+        d["detail"] = dict(self.plan.detail)
+        d["child"] = self.child.to_dict() if self.child is not None else None
+        return d
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "HierarchicalPlan":
+        kw = {f: d[f] for f in _LEVEL_FIELDS}
+        child = d.get("child")
+        return cls(
+            plan=LevelPlan(detail=dict(d.get("detail") or {}), **kw),
+            child=cls.from_dict(child) if child else None,
+        )
+
+    @classmethod
+    def from_json(cls, s: str) -> "HierarchicalPlan":
+        return cls.from_dict(json.loads(s))
+
+    # --------------------------------------------------------------- display
+    def describe(self) -> List[str]:
+        """One printable line per level, indented by depth (the tree the
+        CI dry plan and ``benchmarks/run.py --only plan`` print)."""
+        lines = []
+        for depth, lp in enumerate(self.levels()):
+            ind = "  " * depth
+            if lp.kind == "mesh":
+                lines.append(
+                    f"{ind}{lp.level}[mesh] np_raw={lp.np_raw} "
+                    f"quantized={lp.np} extent={lp.extent} "
+                    f"workers={lp.n_workers} budget={_fmt(lp.budget_bytes)} "
+                    f"shard={_fmt(int(lp.detail.get('shard_bytes', 0)))} "
+                    f"fits={lp.fits} phi={lp.phi}")
+            elif lp.kind == "tile":
+                t = lp.detail["tile"]
+                lines.append(
+                    f"{ind}{lp.level}[tile] block={t['bm']}x{t['bk']}x"
+                    f"{t['bn']} np={lp.np} workers={lp.n_workers} "
+                    f"vmem={_fmt(t['est_vmem_bytes'])}/"
+                    f"{_fmt(lp.budget_bytes)} order={t['order']} "
+                    f"fits={lp.fits} phi={lp.phi}")
+            elif lp.kind == "cache":
+                lines.append(
+                    f"{ind}{lp.level}[cache] np={lp.np} "
+                    f"workers={lp.n_workers} budget={_fmt(lp.budget_bytes)} "
+                    f"part={_fmt(int(lp.partition_bytes))} fits={lp.fits} "
+                    f"phi={lp.phi}")
+            elif lp.kind == "leaf":
+                lines.append(
+                    f"{ind}{lp.level}[leaf] granule={lp.granule_bytes}B "
+                    f"size={_fmt(lp.budget_bytes)}")
+            else:
+                lines.append(
+                    f"{ind}{lp.level}[container] size={_fmt(lp.budget_bytes)}")
+        return lines
+
+
+def _fmt(b: float) -> str:
+    for unit, s in (("GiB", 1 << 30), ("MiB", 1 << 20), ("KiB", 1 << 10)):
+        if b >= s:
+            return f"{b / s:.1f}{unit}"
+    return f"{int(b)}B"
+
+
+# ---------------------------------------------------------------------------
+# FSDP degree quantization (ROADMAP open item)
+# ---------------------------------------------------------------------------
+
+
+def quantize_divisor(np_raw: int, extent: int, multiple_of: int = 1) -> int:
+    """Smallest divisor of ``extent`` >= ``np_raw`` (and a multiple of
+    ``multiple_of``).
+
+    A mesh axis can only realize shard counts that divide its extent
+    (uneven shards force GSPMD's padded layouts); the legacy rules rounded
+    any 1 < np* < extent all the way up to full-axis sharding.  The planner
+    instead quantizes to the nearest realizable degree: np*=5 on an 8-chip
+    axis -> 8, np*=5 on a 12-chip axis -> 6, and np*=3 on a 12-chip axis
+    stays 3 -- collectives stay as cheap as the memory budget allows.
+
+    ``multiple_of`` carries the level above's partition count: this level's
+    partitions refine the outer ones only when the outer count divides the
+    inner, otherwise a partition would straddle an outer-copy (host)
+    boundary.  Falls back to ignoring the constraint when no such divisor
+    exists (e.g. the cap cut the extent below it).
+    """
+    np_raw = max(1, np_raw)
+    if extent <= 0:
+        return np_raw
+    multiple_of = max(1, multiple_of)
+    for d in range(1, extent + 1):
+        if extent % d == 0 and d >= np_raw and d % multiple_of == 0:
+            return d
+    if multiple_of > 1:
+        return quantize_divisor(np_raw, extent, 1)
+    return extent
+
+
+# ---------------------------------------------------------------------------
+# Per-kind level planners
+# ---------------------------------------------------------------------------
+
+
+def _granule_below(level: MemoryLevel) -> int:
+    for lvl in level.levels():
+        if lvl.cache_line_size is not None:
+            return lvl.cache_line_size
+    return DEFAULT_GRANULE
+
+
+def _classify(level: MemoryLevel, workload: Workload,
+              policy: PlanPolicy) -> str:
+    if level.name in MESH_LEVEL_NAMES and level.child is not None:
+        return "mesh"
+    if level.name == "VMEM" and workload.matmul is not None:
+        return "tile"
+    if workload.domain is not None:
+        if policy.tcl is not None:
+            if level.name == policy.tcl:
+                return "cache"
+        elif level.cache_line_size is not None and level.name != "VREG":
+            return "cache"
+    if level.child is None:
+        return "leaf"
+    return "container"
+
+
+def _record_level(level: MemoryLevel, kind: str, n_workers: int) -> LevelPlan:
+    return LevelPlan(
+        level=level.name or kind,
+        kind=kind,
+        budget_bytes=level.per_core_size(),
+        granule_bytes=level.cache_line_size or 0,
+        n_workers=n_workers,
+        extent=max(1, len(level.siblings)),
+    )
+
+
+def _plan_mesh_level(level: MemoryLevel, workload: Workload,
+                     policy: PlanPolicy, n_workers: int) -> LevelPlan:
+    """Algorithm 1 with one child copy as the TCL (HBM under ICI, a host's
+    ICI domain under DCN) -- ``dist.sharding.mesh_decomposition`` run at an
+    arbitrary interconnect level."""
+    child = level.child
+    budget = child.size
+    granule = _granule_below(child)
+    extent = max(1, len(child.siblings))
+    cap = policy.max_np.get(level.name)
+    if cap:
+        extent = min(extent, max(1, cap))
+    phi = make_phi_mesh(overhead=workload.overhead)
+    dists: List[Distribution] = [
+        Array1DDistribution(length=max(1, workload.state_bytes),
+                            element_size=1)
+    ]
+    if workload.replicated_bytes:
+        dists.append(ReplicatedDistribution(workload.replicated_bytes))
+    if policy.strategy == "horizontal":
+        np_raw = min(extent, max(1, n_workers))
+        fits = validate_np(budget, granule, dists, np_raw, phi) == 1
+    else:
+        try:
+            np_raw = find_optimal_np(budget, granule, dists, n_workers, phi,
+                                     max_np=extent)
+            fits = True
+        except NoValidDecomposition:
+            np_raw, fits = extent, False
+    # Quantize to a realizable divisor that is also a multiple of the level
+    # above's partition count (n_workers) -- inner partitions must refine
+    # the outer ones, never straddle a host boundary.
+    np_q = (quantize_divisor(np_raw, extent, multiple_of=n_workers)
+            if policy.quantize else np_raw)
+    part = sum(phi(granule, d, np_q) for d in dists)
+    shard = -(-max(1, workload.state_bytes) // np_q)
+    return LevelPlan(
+        level=level.name, kind="mesh", phi="phi_mesh",
+        budget_bytes=budget, granule_bytes=granule,
+        n_workers=max(1, n_workers), extent=extent,
+        np_raw=np_raw, np=np_q, partition_bytes=part, fits=fits,
+        detail={
+            "tcl_level": child.name,
+            "sharded_bytes": workload.state_bytes,
+            "replicated_bytes": workload.replicated_bytes,
+            "shard_bytes": shard,
+            "overhead": workload.overhead,
+        },
+    )
+
+
+def _plan_tile_level(level: MemoryLevel, workload: Workload,
+                     policy: PlanPolicy, n_workers: int) -> LevelPlan:
+    """The chip-level tile search (``core.autotile``) as one plan level."""
+    from repro.core import autotile
+
+    spec = policy.spec or _default_spec()
+    m, k, n = workload.matmul
+    budget = int(level.per_core_size() * policy.vmem_fraction)
+    if policy.strategy == "horizontal":
+        tile = autotile.plan_matmul_horizontal(
+            m, k, n, dtype_bytes=workload.dtype_bytes,
+            n_workers=n_workers, spec=spec)
+    else:
+        tile = autotile._search_matmul_tiles(
+            m, k, n, workload.dtype_bytes, spec, policy.order,
+            n_workers, budget)
+    return LevelPlan(
+        level=level.name, kind="tile", phi="phi_tpu",
+        budget_bytes=budget,
+        granule_bytes=level.cache_line_size or DEFAULT_GRANULE,
+        n_workers=max(1, n_workers), extent=max(1, tile.n_tasks),
+        np_raw=tile.np, np=tile.np,
+        partition_bytes=float(tile.est_vmem_bytes),
+        fits=tile.est_vmem_bytes <= budget,
+        detail={"tile": {f: getattr(tile, f) for f in (
+            "m", "k", "n", "bm", "bk", "bn", "order", "np",
+            "est_vmem_bytes", "strategy")}},
+    )
+
+
+def _plan_cache_level(level: MemoryLevel, workload: Workload,
+                      policy: PlanPolicy, n_workers: int) -> LevelPlan:
+    """The paper's host-cache search (``Decomposer``) as one plan level."""
+    dists = list(workload.domain)
+    budget = level.per_core_size()
+    line = level.cache_line_size or 64
+    phi = policy.cache_phi
+    if policy.strategy == "horizontal":
+        np_raw = _next_structurally_valid(dists, max(1, n_workers), 1 << 30)
+        if np_raw is None:
+            raise NoValidDecomposition("horizontal: nWorkers not admissible")
+        fits = validate_np(budget, line, dists, np_raw, phi) == 1
+    else:
+        np_raw = find_optimal_np(budget, line, dists, n_workers, phi)
+        fits = True
+    part = sum(phi(line, d, np_raw) for d in dists)
+    return LevelPlan(
+        level=level.name, kind="cache",
+        phi=getattr(phi, "__name__", "phi"),
+        budget_bytes=budget, granule_bytes=line,
+        n_workers=max(1, n_workers), extent=0,
+        np_raw=np_raw, np=np_raw, partition_bytes=part, fits=fits,
+    )
+
+
+def _default_spec():
+    from repro.hw.tpu import chip_spec
+
+    return chip_spec()
+
+
+# ---------------------------------------------------------------------------
+# The recursive walk
+# ---------------------------------------------------------------------------
+
+
+def plan_run(hierarchy: MemoryLevel, workload: Workload,
+             policy: PlanPolicy = PlanPolicy()) -> HierarchicalPlan:
+    """Decompose ``workload`` against the whole ``hierarchy``.
+
+    Walks the level chain outermost-in.  At interconnect levels the search
+    partitions state against one child copy; the child copy level itself
+    (e.g. HBM under ICI) is consumed by that search, so the plan shows one
+    node per *decision* -- ``DCN -> ICI/HBM -> VMEM -> VREG`` is a 4-level
+    plan over a 5-level memory chain.  Each level's realized ``np`` threads
+    down as the next level's worker count; crossing from the mesh into a
+    chip divides it by the chip count (each chip's residual share of the
+    global partitioning -- one partition -- seeds the tile search).
+    """
+    nodes: List[LevelPlan] = []
+    np_thread = max(1, policy.n_workers)
+    level: Optional[MemoryLevel] = hierarchy
+    while level is not None:
+        kind = _classify(level, workload, policy)
+        if kind == "mesh":
+            node = _plan_mesh_level(level, workload, policy, np_thread)
+            nodes.append(node)
+            np_thread = node.np
+            nxt = level.child
+            if nxt is not None and nxt.name not in MESH_LEVEL_NAMES:
+                copies = max(1, len(nxt.siblings))   # the consumed TCL level
+                np_thread = max(1, -(-np_thread // copies))
+                nxt = nxt.child
+            level = nxt
+            continue
+        if kind == "tile":
+            node = _plan_tile_level(level, workload, policy, np_thread)
+            nodes.append(node)
+            np_thread = node.np
+        elif kind == "cache":
+            node = _plan_cache_level(level, workload, policy, np_thread)
+            nodes.append(node)
+            np_thread = node.np
+        else:
+            nodes.append(_record_level(level, kind, np_thread))
+        level = level.child
+
+    hp: Optional[HierarchicalPlan] = None
+    for node in reversed(nodes):
+        hp = HierarchicalPlan(plan=node, child=hp)
+    return hp
+
+
+# ---------------------------------------------------------------------------
+# Cached leaf extraction (the overlap / kernel consumers)
+# ---------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=512)
+def leaf_matmul_plan(
+    m: int,
+    k: int,
+    n: int,
+    dtype_bytes: int = 2,
+    order: str = "cc",
+    n_workers: int = 1,
+    vmem_fraction: float = 1.0,
+) -> MatmulTilePlan:
+    """Memoized VMEM-leaf tile plan for a local ``(m, k) @ (k, n)`` block.
+
+    ``dist.overlap``'s ring kernels and ``kernels.matmul_cc`` pull their
+    ``MatmulTilePlan`` from here -- one single-chip ``plan_run`` per
+    (shape, dtype), reused across every ring step and retrace (the planner
+    successor of ``autotile.plan_matmul_cached``).
+    """
+    spec = _default_spec()
+    hp = plan_run(
+        spec.hierarchy(),
+        Workload(matmul=(m, k, n), dtype_bytes=dtype_bytes),
+        PlanPolicy(order=order, n_workers=n_workers,
+                   vmem_fraction=vmem_fraction, spec=spec),
+    )
+    return hp.tile_plan()

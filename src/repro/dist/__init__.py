@@ -22,7 +22,7 @@ from repro.dist.overlap import (  # noqa: F401
     overlap_matmul,
     plan_ring,
 )
-from repro.dist.pipeline import make_pipeline  # noqa: F401
+from repro.dist.pipeline import dcn_stages, make_pipeline  # noqa: F401
 from repro.dist.sharding import (  # noqa: F401
     COLLECTIVES,
     ShardingRules,
@@ -33,6 +33,7 @@ from repro.dist.sharding import (  # noqa: F401
     default_rules,
     logical_sharding,
     mesh_decomposition,
+    mesh_plan,
     param_shardings,
     use_mesh_rules,
     with_batch_guard,
@@ -47,12 +48,14 @@ __all__ = [
     "active_rule",
     "arch_rules",
     "constrain",
+    "dcn_stages",
     "default_rules",
     "logical_sharding",
     "make_ag_matmul",
     "make_pipeline",
     "make_rs_matmul",
     "mesh_decomposition",
+    "mesh_plan",
     "overlap_matmul",
     "param_shardings",
     "plan_ring",

@@ -34,11 +34,12 @@ The kernels:
     GSPMD rules or non-dividing shapes.
 
 The per-step block compute reuses the chip-level decomposer: on TPU the
-local dot runs the Pallas ``matmul_cc`` kernel under a memoized
-``plan_matmul_cached`` plan (the same shard shape re-plans once, not per
-trace); elsewhere it lowers to ``jnp.dot``.  That nesting -- a chip-level
-cache-conscious plan inside every mesh-level ring step -- is the paper's
-hierarchy recursion (DESIGN.md §5).
+local dot runs the Pallas ``matmul_cc`` kernel under the memoized VMEM
+leaf of the hierarchical planner (``repro.plan.leaf_matmul_plan`` -- the
+same shard shape re-plans once, not per trace); elsewhere it lowers to
+``jnp.dot``.  That nesting -- a chip-level cache-conscious plan inside
+every mesh-level ring step -- is the paper's hierarchy recursion
+(DESIGN.md §5/§6).
 """
 
 from __future__ import annotations
@@ -148,13 +149,19 @@ def plan_ring(p: int, mode: str = "ring") -> RingPlan:
 
 
 def _block_matmul(a: jax.Array, b: jax.Array) -> jax.Array:
-    """One ring step's block product, decomposer-tiled on TPU."""
+    """One ring step's block product, decomposer-tiled on TPU.
+
+    The tile plan is the VMEM leaf of the hierarchical planner
+    (``repro.plan.leaf_matmul_plan``, memoized per local-shard shape): a
+    chip-level cache-conscious sub-plan inside every mesh-level ring step
+    -- the paper's hierarchy recursion (DESIGN.md §5/§6).
+    """
     if jax.default_backend() == "tpu":
-        from repro.core.autotile import plan_matmul_cached
+        from repro.core.plan import leaf_matmul_plan
         from repro.kernels.matmul_cc import matmul_cc
 
-        plan = plan_matmul_cached(a.shape[0], a.shape[1], b.shape[1],
-                                  dtype_bytes=a.dtype.itemsize)
+        plan = leaf_matmul_plan(a.shape[0], a.shape[1], b.shape[1],
+                                dtype_bytes=a.dtype.itemsize)
         return matmul_cc(a, b, plan=plan)
     return jnp.dot(a, b)
 

@@ -14,7 +14,7 @@ ring/serpentine collective matmuls of ``dist.overlap``.
 
 from __future__ import annotations
 
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,8 +24,20 @@ from jax.sharding import Mesh, PartitionSpec as P
 PyTree = Any
 
 
+def dcn_stages(plan) -> int:
+    """Stage count the hierarchical plan's DCN sub-plan prescribes.
+
+    The DCN level's partition count is the host-level decomposition the
+    planner chose (``repro.plan``); pipeline stages over the "pod" axis
+    realize exactly those partitions.  Returns 1 when the plan is None or
+    has no DCN level (single-host meshes).
+    """
+    lp = plan.level("DCN") if plan is not None else None
+    return lp.np if lp is not None else 1
+
+
 def make_pipeline(mesh: Mesh, stage_fn: Callable[[PyTree, jax.Array], jax.Array],
-                  axis: str = "pod"):
+                  axis: str = "pod", plan: Optional[Any] = None):
     """Build ``fn(stage_params, microbatches) -> outputs`` (DESIGN.md §5).
 
     ``stage_params`` is a pytree whose leaves carry a leading stage
@@ -36,8 +48,20 @@ def make_pipeline(mesh: Mesh, stage_fn: Callable[[PyTree, jax.Array], jax.Array]
     ring matmuls, the per-step ``ppermute`` hop is independent of the
     stage compute, so XLA overlaps transfer with work -- the GPipe
     trapezoid is the CC partition stream with stages as partitions.
+
+    ``plan`` (a ``repro.plan.HierarchicalPlan``) maps the stages onto the
+    planner's DCN sub-plan: when the plan partitioned the DCN level, the
+    mesh axis carrying the stages must realize exactly that partition count
+    (a mismatch is a coherence bug -- the state shards the planner sized
+    for one host would straddle stage boundaries).
     """
     n_stages = dict(mesh.shape)[axis]
+    if plan is not None:
+        want = dcn_stages(plan)
+        if want > 1 and want != n_stages:
+            raise ValueError(
+                f"plan's DCN sub-plan prescribes {want} stages but mesh "
+                f"axis {axis!r} has {n_stages}")
     perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
 
     def pipe_local(stage_params: PyTree, mbs: jax.Array) -> jax.Array:

@@ -41,6 +41,7 @@ from repro.core.decompose import (
 )
 from repro.core.distribution import Array1DDistribution, ReplicatedDistribution
 from repro.core.hierarchy import MemoryLevel
+from repro.core.plan import HierarchicalPlan, PlanPolicy, Workload, plan_run
 
 AxisRule = Union[None, str, Tuple[str, ...]]
 PyTree = Any
@@ -129,10 +130,46 @@ class MeshDecomposition:
 
 
 def mesh_hierarchy(mesh, spec=None) -> MemoryLevel:
-    """The mesh in the paper's schema: ICI -> per-chip HBM -> VMEM -> VREG."""
+    """The mesh in the paper's schema: [DCN ->] ICI -> per-chip HBM -> VMEM
+    -> VREG.  A mesh with a "pod" axis gets a DCN level above the ICI (one
+    ICI domain per pod -- the hierarchical planner runs Algorithm 1 at both
+    interconnect levels, DESIGN.md §6)."""
     from repro.hw.tpu import chip_spec
 
-    return (spec or chip_spec()).hierarchy(mesh_devices=mesh.size)
+    hosts = dict(mesh.shape).get("pod", 1)
+    return (spec or chip_spec()).hierarchy(
+        mesh_devices=mesh.size // max(1, hosts), hosts=hosts)
+
+
+def mesh_plan(
+    mesh,
+    *,
+    state_bytes: int = 0,
+    act_bytes: int = 0,
+    hierarchy: Optional[MemoryLevel] = None,
+    max_np: Optional[int] = None,
+    overhead: float = 1.0,
+    matmul: Optional[Tuple[int, int, int]] = None,
+    dtype_bytes: int = 2,
+    spec=None,
+) -> HierarchicalPlan:
+    """``plan_run`` over this mesh's memory hierarchy.
+
+    The one planning call the distribution layer makes: the returned
+    ``HierarchicalPlan`` carries the DCN sub-plan (``dist.pipeline`` stage
+    count), the ICI sub-plan (FSDP degree, raw and divisor-quantized), and
+    -- when ``matmul`` local shapes are given -- the VMEM tile leaf.
+    ``max_np`` caps the ICI partition count (the FSDP capacity of the data
+    axes); ``overhead`` is the per-arch ``phi_mesh`` transient-copy factor.
+    """
+    hierarchy = hierarchy or mesh_hierarchy(mesh, spec)
+    caps = {"ICI": max_np} if max_np else {}
+    return plan_run(
+        hierarchy,
+        Workload(state_bytes=state_bytes, replicated_bytes=act_bytes,
+                 matmul=matmul, dtype_bytes=dtype_bytes, overhead=overhead),
+        PlanPolicy(max_np=caps, spec=spec),
+    )
 
 
 def mesh_decomposition(
@@ -143,28 +180,48 @@ def mesh_decomposition(
 ) -> MeshDecomposition:
     """Run Algorithm 1 with the per-chip HBM as the TCL.
 
-    The domain is the shardable training state (a 1-D byte range) plus a
-    replicated remainder; ``find_optimal_np`` returns the smallest partition
-    count whose per-chip footprint (``phi_mesh``) fits one HBM copy.  If no
-    ``np <= max_np`` fits, the decomposition saturates at ``max_np`` with
-    ``fits=False`` -- shard as hard as the mesh allows.
+    A thin wrapper over a single-level ``plan_run`` (``repro.plan``): the
+    planner's ICI node runs exactly this search -- the shardable training
+    state (a 1-D byte range) plus a replicated remainder, the smallest
+    partition count whose per-chip footprint (``phi_mesh``) fits one HBM
+    copy.  Returns the *raw* np (legacy contract; the planner's quantized
+    degree lives in the sub-plan).  The search is bounded by the smaller of
+    ``max_np`` and the hierarchy's chip count -- a shard count above the
+    number of chips is not realizable, so when nothing fits the
+    decomposition saturates at that bound with ``fits=False`` (shard as
+    hard as the mesh allows).
     """
-    hbm = hierarchy.find("HBM") or hierarchy
-    budget = hbm.per_core_size()
-    granule = hbm.cache_line_size or 8 * 128 * 4
-    phi = make_phi_mesh()
-    dists = [Array1DDistribution(length=max(1, sharded_bytes), element_size=1)]
-    if replicated_bytes:
-        dists.append(ReplicatedDistribution(replicated_bytes))
-    try:
-        np_ = find_optimal_np(budget, granule, dists, 1, phi, max_np=max_np)
-        fits = True
-    except NoValidDecomposition:
-        np_, fits = max_np, False
+    hp = plan_run(
+        hierarchy,
+        Workload(state_bytes=sharded_bytes, replicated_bytes=replicated_bytes),
+        PlanPolicy(max_np={"ICI": max_np, "DCN": max_np}, quantize=False),
+    )
+    lp = hp.level("ICI")
+    if lp is None:
+        # Hierarchy without an interconnect level: search it directly.
+        hbm = hierarchy.find("HBM") or hierarchy
+        budget = hbm.per_core_size()
+        granule = hbm.cache_line_size or 8 * 128 * 4
+        dists = [Array1DDistribution(length=max(1, sharded_bytes),
+                                     element_size=1)]
+        if replicated_bytes:
+            dists.append(ReplicatedDistribution(replicated_bytes))
+        try:
+            np_ = find_optimal_np(budget, granule, dists, 1, make_phi_mesh(),
+                                  max_np=max_np)
+            fits = True
+        except NoValidDecomposition:
+            np_, fits = max_np, False
+        return MeshDecomposition(
+            np=np_, budget_bytes=budget, granule_bytes=granule,
+            sharded_bytes=sharded_bytes, replicated_bytes=replicated_bytes,
+            fits=fits,
+        )
     return MeshDecomposition(
-        np=np_, budget_bytes=budget, granule_bytes=granule,
+        np=lp.np_raw, budget_bytes=lp.budget_bytes,
+        granule_bytes=lp.granule_bytes,
         sharded_bytes=sharded_bytes, replicated_bytes=replicated_bytes,
-        fits=fits,
+        fits=lp.fits,
     )
 
 
@@ -188,22 +245,30 @@ def default_rules(
     act_bytes: int = 0,
     hierarchy: Optional[MemoryLevel] = None,
     seq_sharded: bool = False,
+    overhead: float = 1.0,
+    plan: Optional[HierarchicalPlan] = None,
 ) -> ShardingRules:
     """Architecture-independent rules: TP over "model" for the structural
     axes, batch over the data axes, and the FSDP / replicated choice made by
-    ``mesh_decomposition`` over ``state_bytes`` (0 bytes -> trivially fits
-    -> replicated)."""
+    the hierarchical planner (``repro.plan``) over ``state_bytes`` (0 bytes
+    -> trivially fits -> replicated).  Pass ``plan`` to consume an existing
+    ``HierarchicalPlan`` instead of re-planning; the plan (and its
+    raw/quantized FSDP degrees) rides in ``meta`` either way."""
     sizes = _axis_sizes(mesh)
     model_n = sizes.get("model", 1)
     data = _data_axes(mesh)
     fsdp_capacity = max(1, prod(sizes[a] for a in data))
-    hierarchy = hierarchy or mesh_hierarchy(mesh)
-    dec = mesh_decomposition(
-        hierarchy,
-        sharded_bytes=state_bytes // max(1, model_n),
-        replicated_bytes=act_bytes,
-        max_np=fsdp_capacity,
-    )
+    if plan is None:
+        plan = mesh_plan(
+            mesh,
+            state_bytes=state_bytes // max(1, model_n),
+            act_bytes=act_bytes,
+            hierarchy=hierarchy,
+            max_np=fsdp_capacity,
+            overhead=overhead,
+        )
+    dec = plan.level("ICI") or plan.leaf()
+    dcn = plan.level("DCN")
     embed_rule: AxisRule = None
     if not dec.replicated and data:
         embed_rule = data[0] if len(data) == 1 else data
@@ -230,11 +295,14 @@ def default_rules(
         "layers": None,
     }
     return ShardingRules(param_rules, act_rules, meta={
-        "mesh_np": dec.np,
+        "mesh_np": dec.np_raw,
+        "fsdp_degree": dec.np,           # divisor-quantized (ROADMAP item)
         "mesh_budget_bytes": dec.budget_bytes,
         "mesh_fits": dec.fits,
         "fsdp": not dec.replicated,
         "fsdp_capacity": fsdp_capacity,
+        "dcn_np": dcn.np if dcn is not None else 1,
+        "plan": plan,
     })
 
 
@@ -245,17 +313,21 @@ def arch_rules(
     hierarchy: Optional[MemoryLevel] = None,
     act_bytes: int = 0,
     state_bytes_per_param: int = TRAIN_STATE_BYTES_PER_PARAM,
+    plan: Optional[HierarchicalPlan] = None,
 ) -> ShardingRules:
     """Rules for one architecture on one mesh.
 
     Structural (divisibility-driven) TP choices come from ``cfg``; the
-    memory-driven FSDP degree comes from the mesh-level decomposer run on
-    this architecture's resident-state footprint.  Pass ``hierarchy`` to
+    memory-driven FSDP degree comes from the hierarchical planner
+    (``repro.plan``) run on this architecture's resident-state footprint
+    with its ``cfg.overhead`` phi_mesh factor.  Pass ``hierarchy`` to
     decompose against a different machine (tests shrink the HBM budget to
     force the replicated -> FSDP flip); pass ``act_bytes`` to reserve
     per-chip HBM for activations (they do not shrink with the param np);
     pass ``state_bytes_per_param`` for non-training memory models (serving
-    holds only the bf16 weights, no master copy or optimizer moments).
+    holds only the bf16 weights, no master copy or optimizer moments);
+    pass ``plan`` to consume an existing ``HierarchicalPlan`` instead of
+    re-planning.
     """
     sizes = _axis_sizes(mesh)
     model_n = sizes.get("model", 1)
@@ -266,6 +338,8 @@ def arch_rules(
         act_bytes=act_bytes,
         hierarchy=hierarchy,
         seq_sharded=seq_sharded,
+        overhead=cfg.overhead,
+        plan=plan,
     )
     pr, ar = dict(rules.param_rules), dict(rules.act_rules)
 

@@ -35,15 +35,18 @@ class TPUSpec:
     def usable_vmem(self) -> int:
         return self.vmem_bytes - self.vmem_reserved_bytes
 
-    def hierarchy(self, mesh_devices: int = 0) -> MemoryLevel:
+    def hierarchy(self, mesh_devices: int = 0, hosts: int = 1) -> MemoryLevel:
         """This chip in the paper's §3.1 JSON schema (HBM -> VMEM -> VREG);
-        with ``mesh_devices`` the mesh-extended ICI -> HBM -> ... chain."""
+        with ``mesh_devices`` the mesh-extended ICI -> HBM -> ... chain, and
+        with ``hosts > 1`` the DCN level above it (``mesh_devices`` chips
+        per host -- see ``tpu_hierarchy`` / DESIGN.md §6)."""
         return tpu_hierarchy(
             hbm_bytes=self.hbm_bytes,
             vmem_bytes=self.usable_vmem,
             lane_tile_bytes=self.sublane_bytes * self.lane,
             n_cores=self.num_cores,
             mesh_devices=mesh_devices,
+            hosts=hosts,
         )
 
     def sublane(self, dtype_bytes: int) -> int:

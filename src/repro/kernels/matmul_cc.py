@@ -26,7 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.autotile import MatmulTilePlan, plan_matmul
+from repro.core.autotile import MatmulTilePlan
+from repro.core.plan import leaf_matmul_plan
 
 
 def _mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, gk: int):
@@ -55,7 +56,9 @@ def matmul_cc(
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
     if plan is None:
-        plan = plan_matmul(m, k, n, dtype_bytes=a.dtype.itemsize, order=order)
+        # VMEM leaf of the hierarchical planner (memoized per shape/dtype).
+        plan = leaf_matmul_plan(m, k, n, dtype_bytes=a.dtype.itemsize,
+                                order=order)
     bm, bk, bn = plan.bm, plan.bk, plan.bn
     gm, gn, gk = plan.grid
 

@@ -155,6 +155,96 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     return report
 
 
+def print_plan_tree(arch: str, multi_pod: bool) -> None:
+    """Print the full hierarchical plan (``repro.plan``) for one arch on a
+    production mesh -- the planner walk the trainer consumes, without
+    lowering anything.  The multi-pod mesh carries a "pod" axis, so its
+    hierarchy (and hence the printed tree) has a DCN level above the ICI.
+    """
+    from repro.dist.sharding import TRAIN_STATE_BYTES_PER_PARAM, mesh_plan
+    from repro.launch.specs import activation_footprint
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_model_config(arch)
+    shape = get_shape("train_4k")
+    sizes = dict(mesh.shape)
+    model_n = sizes.get("model", 1)
+    data_n = max(1, mesh.size // model_n)
+    hp = mesh_plan(
+        mesh,
+        state_bytes=cfg.param_count() * TRAIN_STATE_BYTES_PER_PARAM // model_n,
+        act_bytes=activation_footprint(cfg, shape, "full") // data_n,
+        max_np=data_n,
+        overhead=cfg.overhead,
+        matmul=(shape.seq_len, cfg.d_model, cfg.d_ff or cfg.d_model),
+    )
+    print(f"[plan] {arch} on {'2x16x16' if multi_pod else '16x16'}:")
+    for line in hp.describe():
+        print("  " + line)
+
+
+def calibrate_cell(arch: str, shape_name: str, multi_pod: bool = False,
+                   out_root: str = None) -> dict:
+    """Compare ``phi_mesh``'s per-chip estimate against the lowered-HLO
+    memory analysis (the satellite calibration helper for
+    ``ModelConfig.overhead``).
+
+    Lowers + compiles the cell, reads XLA's per-device peak bytes, and
+    divides ``phi_mesh``'s per-chip estimate by it.  The estimate is
+    evaluated at the FSDP degree the rules actually *realize* (full data
+    axes when sharded, 1 when replicated), not the planner's quantized np
+    -- the lowered HLO shards at the realized degree, so comparing at any
+    other np would fold a sharding-degree mismatch into the ratio.  A
+    ratio < 1 means ``phi_mesh`` underestimates the resident transients --
+    raise ``overhead`` toward ``1/ratio``.
+    """
+    from repro.core.decompose import make_phi_mesh
+    from repro.core.distribution import (
+        Array1DDistribution,
+        ReplicatedDistribution,
+    )
+    from repro.dist.sharding import arch_rules
+    from repro.launch.specs import activation_footprint, decode_footprint
+
+    rep = lower_cell(arch, shape_name, multi_pod, out_root=out_root)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_model_config(arch)
+    shape = get_shape(shape_name)
+    data_n = max(1, mesh.size // dict(mesh.shape).get("model", 1))
+    if shape.kind == "train":
+        rules = arch_rules(
+            cfg, mesh,
+            act_bytes=activation_footprint(cfg, shape, "full") // data_n)
+    else:
+        rules = arch_rules(
+            cfg, mesh, state_bytes_per_param=2,
+            act_bytes=decode_footprint(cfg, shape,
+                                       shape.seq_len) // mesh.size)
+    lp = rules.meta["plan"].level("ICI")
+    realized = rules.meta["fsdp_capacity"] if rules.meta["fsdp"] else 1
+    phi = make_phi_mesh(overhead=lp.detail["overhead"])
+    dists = [Array1DDistribution(
+        length=max(1, lp.detail["sharded_bytes"]), element_size=1)]
+    if lp.detail["replicated_bytes"]:
+        dists.append(ReplicatedDistribution(lp.detail["replicated_bytes"]))
+    est = sum(phi(lp.granule_bytes, d, realized) for d in dists)
+    mem = rep["memory"]
+    # XLA's CPU backend reports no peak; fall back to the resident total
+    # (arguments + temporaries + outputs), which is what phi_mesh models.
+    peak = mem["peak_bytes"] or sum(
+        mem[k] or 0 for k in ("argument_bytes", "temp_bytes", "output_bytes"))
+    ratio = est / peak if peak else float("inf")
+    print(f"[cal] {arch} x {shape_name} "
+          f"({'2x16x16' if multi_pod else '16x16'}): "
+          f"phi_mesh_est={est / 2 ** 30:.2f}GiB "
+          f"hlo_peak={peak / 2 ** 30:.2f}GiB "
+          f"calibration_ratio={ratio:.2f} (overhead={cfg.overhead})")
+    return {"arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "phi_mesh_est_bytes": est, "hlo_peak_bytes": peak,
+            "calibration_ratio": ratio, "overhead": cfg.overhead}
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="all")
@@ -164,6 +254,12 @@ def main() -> int:
     ap.add_argument("--out", default=None)
     ap.add_argument("--cache_policy", default="baseline",
                     choices=["baseline", "auto"])
+    ap.add_argument("--plan-tree", action="store_true",
+                    help="print each cell's hierarchical plan (repro.plan) "
+                         "and exit -- no lowering")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="lower + compile each cell and print the phi_mesh "
+                         "vs HLO-memory calibration ratio")
     args = ap.parse_args()
 
     archs = list_archs() if args.arch == "all" else [args.arch]
@@ -171,6 +267,27 @@ def main() -> int:
               if args.shape == "all" else [args.shape])
     meshes = {"single": [False], "multi": [True],
               "both": [False, True]}[args.mesh]
+
+    if args.plan_tree:
+        for arch in archs:
+            for multi_pod in meshes:
+                print_plan_tree(arch, multi_pod)
+        return 0
+
+    if args.calibrate:
+        n_fail = 0
+        for arch in archs:
+            for shape_name in shapes:
+                if skip_reason(arch, shape_name):
+                    continue
+                for multi_pod in meshes:
+                    try:
+                        calibrate_cell(arch, shape_name, multi_pod,
+                                       out_root=args.out)
+                    except Exception as e:
+                        n_fail += 1
+                        print(f"[cal-FAIL] {arch} x {shape_name}: {e}")
+        return 1 if n_fail else 0
 
     out_dir = args.out or os.path.abspath(RESULTS_DIR)
     os.makedirs(out_dir, exist_ok=True)

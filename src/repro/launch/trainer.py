@@ -90,6 +90,7 @@ class TrainStep:
     opt_sharding: OptState
     batch_sharding: Dict[str, NamedSharding]
     model: Model
+    plan: Any = None                  # the HierarchicalPlan the rules consumed
 
 
 def make_train_step(
@@ -99,18 +100,22 @@ def make_train_step(
     train: TrainConfig = TrainConfig(),
     rules: Optional[ShardingRules] = None,
     jit: bool = True,
+    plan: Optional[Any] = None,
 ) -> TrainStep:
     if rules is None:
-        # Mesh-level decomposition: the FSDP/replicated choice inside
-        # arch_rules runs Algorithm 1 against per-chip HBM, with this step's
-        # activation share reserved as the replicated phi term (see
-        # dist.sharding).  Activations shard over the data axes only -- the
-        # residual stream replicates across "model" -- so the reserve
-        # divides by the data extent.
+        # Hierarchical planning (repro.plan): the FSDP/replicated choice
+        # inside arch_rules walks the mesh hierarchy (DCN -> ICI -> VMEM)
+        # once, with this step's activation share reserved as the
+        # replicated phi term (see dist.sharding).  Activations shard over
+        # the data axes only -- the residual stream replicates across
+        # "model" -- so the reserve divides by the data extent.  Pass
+        # ``plan`` to reuse a plan built elsewhere (dry-run, benchmarks)
+        # instead of re-planning.
         data_n = max(1, mesh.size // dict(mesh.shape).get("model", 1))
         rules = arch_rules(
             cfg, mesh,
-            act_bytes=activation_footprint(cfg, shape, train.remat) // data_n)
+            act_bytes=activation_footprint(cfg, shape, train.remat) // data_n,
+            plan=plan)
     rules = with_batch_guard(rules, mesh, shape.global_batch)
     rules = _apply_collectives(rules, train.collectives)
     model = build_model(cfg, remat=train.remat)
@@ -190,7 +195,7 @@ def make_train_step(
         )
     return TrainStep(fn=step_fn, param_sharding=p_shard,
                      opt_sharding=opt_shard, batch_sharding=b_shard,
-                     model=model)
+                     model=model, plan=rules.meta.get("plan"))
 
 
 def init_sharded_state(ts: TrainStep, mesh: Mesh, seed: int,
@@ -236,6 +241,7 @@ def make_serve_steps(
     cache_seq_sharded: bool = False,
     cache_policy: str = "auto",
     collectives: str = "gspmd",
+    plan: Optional[Any] = None,
 ) -> ServeSteps:
     """Serve-step factory. ``cache_policy="auto"`` applies the §Perf-winning
     placement: shard the KV cache over heads when kv_heads divides the
@@ -268,7 +274,8 @@ def make_serve_steps(
             cfg, mesh, seq_sharded=long_context,
             state_bytes_per_param=2,
             act_bytes=decode_footprint(
-                cfg, shape, shape.seq_len + max_len_extra) // mesh.size)
+                cfg, shape, shape.seq_len + max_len_extra) // mesh.size,
+            plan=plan)
     rules = with_batch_guard(rules, mesh, shape.global_batch)
     rules = _apply_collectives(rules, collectives)
     if weights_tp_only:

@@ -1,0 +1,31 @@
+"""``repro.plan`` -- the recursive planner API (see ``repro.core.plan``).
+
+Import surface for consumers::
+
+    from repro.plan import HierarchicalPlan, PlanPolicy, Workload, plan_run
+
+The implementation lives in ``repro.core.plan`` next to the rest of the
+paper machinery; this module is the stable, documented entry point.
+"""
+
+from repro.core.plan import (  # noqa: F401
+    MESH_LEVEL_NAMES,
+    HierarchicalPlan,
+    LevelPlan,
+    PlanPolicy,
+    Workload,
+    leaf_matmul_plan,
+    plan_run,
+    quantize_divisor,
+)
+
+__all__ = [
+    "MESH_LEVEL_NAMES",
+    "HierarchicalPlan",
+    "LevelPlan",
+    "PlanPolicy",
+    "Workload",
+    "leaf_matmul_plan",
+    "plan_run",
+    "quantize_divisor",
+]
