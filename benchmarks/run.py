@@ -13,6 +13,10 @@ Prints ``name,us_per_call,derived`` CSV lines.
              (gspmd vs ring vs serpentine, DESIGN.md §5; needs >= 2
              devices -- force them with
              XLA_FLAGS=--xla_force_host_platform_device_count=4)
+  serve    -- tok/s of the plan-driven serving engine (repro.serve) and
+             planned-vs-naive KV page sizes; with --dry, the decode plan
+             tree + the DCN-free / VMEM-fit assertions CI greps
+             (DESIGN.md §7)
 
 Usage: ``python -m benchmarks.run [--quick] [--only table3,roofline]
                                   [--collectives gspmd|ring|serpentine]``
@@ -301,6 +305,83 @@ def collectives_bench(quick: bool) -> list:
     return out
 
 
+def serve_dry() -> list:
+    """--only serve --dry: the decode plan tree end to end, no model math.
+
+    Walks ``repro.serve.plan_decode`` for a forced single-host 4-way
+    tensor-parallel mesh (DCN-free by construction: one host, so the
+    hierarchy tops out at the ICI) and asserts the page level picked a
+    page that fits the VMEM leaf double-buffered -- the CI serve smoke
+    gate (``ci/run_tests.sh`` greps ``dcn_free=True`` and
+    ``page_fits_vmem=True``).
+    """
+    from jax.sharding import AbstractMesh
+    from repro.configs import get_model_config
+    from repro.core.plan import PAGE_BUFFERING
+    from repro.serve import page_spec_from_plan, plan_decode
+
+    mesh = AbstractMesh((("data", 1), ("model", 4)))
+    cfg = get_model_config("llama3.2-1b")
+    hp = plan_decode(cfg, mesh, max_len=32768, batch=8)
+    out = []
+    for i, line in enumerate(hp.describe()):
+        out.append(f"serve_plan_{cfg.arch}_{i},0,{line}")
+    levels = [lp.level for lp in hp.levels()]
+    page = hp.page_plan()
+    vmem = hp.level("VMEM")
+    fits = (page is not None and vmem is not None
+            and PAGE_BUFFERING * page["page_bytes"] <= vmem.budget_bytes)
+    spec = page_spec_from_plan(hp, cfg)
+    out.append(
+        f"serve_dry_summary,0,levels={'>'.join(levels)};"
+        f"dcn_free={'DCN' not in levels};"
+        f"page_tokens={page['page_tokens'] if page else 0};"
+        f"kv_shard={hp.kv_shard()};"
+        f"page_fits_vmem={fits};"
+        f"global_page_bytes={spec.page_bytes}")
+    return out
+
+
+def serve_bench(quick: bool) -> list:
+    """--only serve: tok/s of the plan-driven engine on this host, next to
+    the planned-vs-naive page sizes (naive = the legacy loop's allocation
+    granule: one full ``max_len`` buffer per request up front)."""
+    import numpy as np
+    from repro.configs import get_model_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve import ServeEngine, ServePolicy, kv_token_bytes
+
+    cfg = get_model_config("llama3.2-1b").reduced()
+    n_new = 8 if quick else 24
+    max_len = 128 if quick else 256
+    engine = ServeEngine(
+        cfg, make_host_mesh(),
+        policy=ServePolicy(max_new_tokens=n_new, max_slots=4,
+                           max_len=max_len))
+    rng = np.random.default_rng(0)
+    lens = (16, 16, 32, 32, 16, 48) if not quick else (16, 16, 32)
+    prompts = [rng.integers(0, cfg.vocab_size, n, dtype=np.int32)
+               for n in lens]
+    t0 = time.perf_counter()
+    outs = engine.generate(prompts)
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(o) for o in outs)
+    m = engine.metrics
+    tok_bytes, _, _ = kv_token_bytes(cfg, 4)
+    naive_tokens = max_len                  # legacy: full buffer up front
+    naive_resident = naive_tokens * tok_bytes * len(prompts)
+    return [
+        f"serve_toks,{dt / max(1, n_tok) * 1e6:.0f},"
+        f"tok_s={n_tok / max(dt, 1e-9):.1f};tokens={n_tok};"
+        f"requests={len(prompts)};cohorts={m['cohorts']}",
+        f"serve_pages,0,planned_page_tokens={m['page_tokens']};"
+        f"naive_page_tokens={naive_tokens};"
+        f"planned_peak_resident={m.get('peak_resident_bytes', 0)};"
+        f"naive_resident={naive_resident};"
+        f"kv_shard={m['kv_shard']};evictions={m['evictions']}",
+    ]
+
+
 SECTIONS = {
     "table3": table3,
     "table4": table4,
@@ -311,6 +392,7 @@ SECTIONS = {
     "plans": plans,
     "plan": plan_tree,
     "collectives": collectives_bench,
+    "serve": serve_bench,
 }
 
 
@@ -371,6 +453,11 @@ def main() -> None:
         # CI gate: unlike the benchmark sections below, failures here must
         # propagate to a nonzero exit, not become an _ERROR CSV row.
         print("name,us_per_call,derived")
+        if args.only.strip() == "serve":
+            # The serve smoke: decode plan tree + page/DCN assertions only.
+            for line in serve_dry():
+                print(line)
+            return
         for line in dry(args.quick, args.collectives):
             print(line)
         return

@@ -39,4 +39,16 @@ printf '%s\n' "$plan_out" | grep -q 'DCN\[mesh\]' \
 printf '%s\n' "$plan_out" | grep -q 'np_raw=5 quantized=8' \
     || { echo "FAIL: plan tree is missing the quantized FSDP degree"; exit 1; }
 
+echo "== smoke: plan-driven serving (forced 4-device dry) =="
+# The serving engine's decode plan end to end on every run: a single-host
+# 4-way TP mesh must produce a DCN-free plan whose KV page fits the VMEM
+# leaf double-buffered (DESIGN.md §7).
+serve_out="$(XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+    python -m benchmarks.run --only serve --dry)"
+printf '%s\n' "$serve_out"
+printf '%s\n' "$serve_out" | grep -q 'dcn_free=True' \
+    || { echo "FAIL: serve plan is not DCN-free"; exit 1; }
+printf '%s\n' "$serve_out" | grep -q 'page_fits_vmem=True' \
+    || { echo "FAIL: serve plan page does not fit VMEM"; exit 1; }
+
 echo "CI OK"

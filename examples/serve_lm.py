@@ -1,15 +1,20 @@
-"""Batched serving example: prefill a prompt batch, then greedy-decode with
-the family-appropriate KV cache (try ``--arch mixtral-8x7b`` for the
-sliding-window ring cache or ``--arch deepseek-v2-236b`` for the MLA latent
-cache -- reduced-size variants run on this CPU).
+"""Serving example: the plan-driven engine (``repro.serve``, DESIGN.md §7)
+over a batch of mixed-length prompts -- page size, KV head sharding, and
+the admission budget all come from the hierarchical planner's decode
+workload.  Try ``--arch mixtral-8x7b`` for the sliding-window ring cache,
+``--arch deepseek-v2-236b`` for the MLA latent cache, or
+``--sampling top_k --top_k 40`` for seeded sampling (reduced-size
+variants run on this CPU).
 
 Run: ``PYTHONPATH=src python examples/serve_lm.py [--arch zamba2-1.2b]``
+(or, after ``pip install -e .``: ``repro-serve --arch zamba2-1.2b``).
 """
 
 import sys
 
 args = sys.argv[1:] or ["--arch", "llama3.2-1b", "--tokens", "24",
-                        "--batch", "4", "--prompt_len", "48"]
+                        "--batch", "4", "--prompt_len", "48",
+                        "--mixed", "1"]
 
 from repro.launch.serve import main  # noqa: E402
 

@@ -12,6 +12,8 @@ registers it under its ``--arch`` id.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -308,6 +310,65 @@ class RunConfig:
 
 
 # ---------------------------------------------------------------------------
+# phi_mesh calibration artifact (launch/dryrun.py --calibrate)
+# ---------------------------------------------------------------------------
+
+#: Env var overriding the calibration artifact path (tests point it at a
+#: tmp file; unset, the repo-level ``experiments/calibration.json`` is
+#: used when present).
+CALIBRATION_ENV = "REPRO_CALIBRATION"
+
+
+def calibration_path() -> str:
+    override = os.environ.get(CALIBRATION_ENV)
+    if override:
+        return override
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    return os.path.join(root, "experiments", "calibration.json")
+
+
+#: path -> ((mtime_ns, size) | None, parsed mapping).  Keyed on the stat
+#: signature so a rewrite (e.g. ``dryrun --calibrate`` mid-process) is
+#: picked up without any manual cache invalidation.
+_CAL_CACHE: Dict[str, Tuple[Optional[Tuple[int, int]], Dict[str, float]]] = {}
+
+
+def _load_calibration(path: str) -> Dict[str, float]:
+    """``{arch: overhead}`` from a calibration artifact (empty on any
+    read/parse problem -- calibration is advisory, never a hard dep)."""
+    try:
+        st = os.stat(path)
+        sig: Optional[Tuple[int, int]] = (st.st_mtime_ns, st.st_size)
+    except OSError:
+        sig = None
+    cached = _CAL_CACHE.get(path)
+    if cached is not None and cached[0] == sig:
+        return cached[1]
+    out: Dict[str, float] = {}
+    if sig is not None:
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            data = {}
+        for arch, entry in data.items():
+            if arch.startswith("_"):
+                continue
+            try:
+                out[arch] = float(entry["overhead"])
+            except (KeyError, TypeError, ValueError):
+                continue
+    _CAL_CACHE[path] = (sig, out)
+    return out
+
+
+def calibration_overhead(arch_id: str) -> Optional[float]:
+    """The measured ``phi_mesh`` overhead for one arch, or None."""
+    return _load_calibration(calibration_path()).get(arch_id)
+
+
+# ---------------------------------------------------------------------------
 # Registry + CLI
 # ---------------------------------------------------------------------------
 
@@ -330,7 +391,16 @@ def get_model_config(arch_id: str) -> ModelConfig:
     _ensure_loaded()
     if arch_id not in _REGISTRY:
         raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_REGISTRY)}")
-    return _REGISTRY[arch_id]()
+    cfg = _REGISTRY[arch_id]()
+    if cfg.overhead == 1.0:
+        # Registered configs that leave ``overhead`` at its default pick up
+        # the measured value from the calibration artifact
+        # (``launch/dryrun.py --calibrate``); an explicit per-arch overhead
+        # always wins.
+        measured = calibration_overhead(arch_id)
+        if measured is not None:
+            cfg = replace(cfg, overhead=max(1.0, measured))
+    return cfg
 
 
 def get_shape(name: str, smoke: bool = False) -> ShapeConfig:

@@ -40,6 +40,7 @@ thin wrappers over single-level ``plan_run`` calls.
 from __future__ import annotations
 
 import json
+import math
 from dataclasses import dataclass, field
 from functools import lru_cache
 from typing import Any, Dict, Iterator, List, Mapping, Optional, Sequence, Tuple
@@ -63,6 +64,9 @@ from repro.core.hierarchy import MemoryLevel
 
 __all__ = [
     "MESH_LEVEL_NAMES",
+    "PAGE_ALIGN",
+    "PAGE_BUFFERING",
+    "PAGE_LEVEL_NAMES",
     "HierarchicalPlan",
     "LevelPlan",
     "PlanPolicy",
@@ -79,6 +83,19 @@ MESH_LEVEL_NAMES = ("DCN", "ICI")
 
 #: Fallback sharding granule: one (sublane x lane) f32 register tile.
 DEFAULT_GRANULE = 8 * 128 * 4
+
+#: Levels whose leaf budget a decode KV *page* is fit against (the TPU
+#: scratchpad, or the per-core L2 share on the CPU path).
+PAGE_LEVEL_NAMES = ("VMEM", "L2")
+
+#: KV pages are sized in whole sublane groups of tokens: the cache's
+#: sequence dim is the second-minor dim of each (page_tokens, head_dim)
+#: register tile, so a page that is not a sublane multiple pads up anyway.
+PAGE_ALIGN = 8
+
+#: Streaming pages are double-buffered (the next page's DMA overlaps the
+#: current page's attention math), so two pages are resident at once.
+PAGE_BUFFERING = 2
 
 
 # ---------------------------------------------------------------------------
@@ -97,6 +114,15 @@ class Workload:
     paper-style ``Distribution`` composite for host-cache levels (the CPU
     path).  ``overhead`` is the ``phi_mesh`` transient-copy factor
     (gradient buckets, all-gather destinations -- ``ModelConfig.overhead``).
+
+    The decode (serving) workload adds the KV-cache terms (``repro.serve``):
+    ``kv_bytes_per_token`` is the *global* per-token KV footprint (bytes x
+    heads x layers), ``kv_layers``/``kv_heads`` its layer count and
+    shardable head extent, ``max_tokens`` the per-sequence resident-token
+    bound.  Mesh levels then choose the KV head sharding (recorded as
+    ``detail["kv_shard"]``), and the ``PAGE_LEVEL_NAMES`` leaf runs the
+    page search: partition one sequence's resident KV token range until
+    one partition -- a *page* -- fits the leaf budget double-buffered.
     """
 
     state_bytes: int = 0
@@ -105,6 +131,10 @@ class Workload:
     dtype_bytes: int = 2
     overhead: float = 1.0
     domain: Optional[Tuple[Distribution, ...]] = None
+    kv_bytes_per_token: int = 0
+    kv_layers: int = 1
+    kv_heads: int = 0
+    max_tokens: int = 0
 
 
 @dataclass(frozen=True)
@@ -211,6 +241,24 @@ class HierarchicalPlan:
                 return MatmulTilePlan(**lp.detail["tile"])
         return None
 
+    def page_plan(self) -> Optional[Mapping[str, Any]]:
+        """The decode workload's KV page record (None if no page level):
+        ``{"page_tokens", "page_bytes", "tok_bytes", "kv_shard", ...}`` --
+        the leaf ``repro.serve`` sizes its paged KV cache from."""
+        for lp in self.levels():
+            if lp.kind == "page":
+                return lp.detail["page"]
+        return None
+
+    def kv_shard(self) -> int:
+        """The KV head sharding degree the innermost mesh level chose for a
+        decode workload (1 when no mesh level carries one)."""
+        shard = 1
+        for lp in self.levels():
+            if lp.kind == "mesh" and "kv_shard" in lp.detail:
+                shard = int(lp.detail["kv_shard"])
+        return shard
+
     # ------------------------------------------------------------------ JSON
     def to_dict(self) -> dict:
         d: Dict[str, Any] = {f: getattr(self.plan, f) for f in _LEVEL_FIELDS}
@@ -256,6 +304,14 @@ class HierarchicalPlan:
                     f"vmem={_fmt(t['est_vmem_bytes'])}/"
                     f"{_fmt(lp.budget_bytes)} order={t['order']} "
                     f"fits={lp.fits} phi={lp.phi}")
+            elif lp.kind == "page":
+                pg = lp.detail["page"]
+                lines.append(
+                    f"{ind}{lp.level}[page] page_tokens={pg['page_tokens']} "
+                    f"page={_fmt(pg['page_bytes'])} x{pg['buffering']} "
+                    f"kv_shard={pg['kv_shard']} np={lp.np} "
+                    f"budget={_fmt(lp.budget_bytes)} fits={lp.fits} "
+                    f"phi={lp.phi}")
             elif lp.kind == "cache":
                 lines.append(
                     f"{ind}{lp.level}[cache] np={lp.np} "
@@ -331,6 +387,9 @@ def _classify(level: MemoryLevel, workload: Workload,
         return "mesh"
     if level.name == "VMEM" and workload.matmul is not None:
         return "tile"
+    if (workload.kv_bytes_per_token > 0 and workload.matmul is None
+            and workload.domain is None and level.name in PAGE_LEVEL_NAMES):
+        return "page"
     if workload.domain is not None:
         if policy.tcl is not None:
             if level.name == policy.tcl:
@@ -385,22 +444,42 @@ def _plan_mesh_level(level: MemoryLevel, workload: Workload,
     # Quantize to a realizable divisor that is also a multiple of the level
     # above's partition count (n_workers) -- inner partitions must refine
     # the outer ones, never straddle a host boundary.
-    np_q = (quantize_divisor(np_raw, extent, multiple_of=n_workers)
-            if policy.quantize else np_raw)
+    #
+    # A decode workload (kv_heads > 0) partitions the KV cache over its
+    # heads instead: the only degrees one mesh axis realizes for a cache
+    # tensor are "unsharded" and "the whole axis" (GSPMD NamedSharding --
+    # sub-axis sharding is the same open ROADMAP item as FSDP sub-axis
+    # degrees), and the head count must divide evenly, so the shard degree
+    # snaps to the axis extent when the heads fill it and to 1 otherwise.
+    if workload.kv_heads > 0:
+        head_extent = (extent if extent > 1
+                       and workload.kv_heads % extent == 0 else 1)
+        np_q = (head_extent if (np_raw > 1 and policy.quantize
+                                and head_extent > 1)
+                else (1 if policy.quantize else np_raw))
+        if np_q < np_raw:
+            fits = validate_np(budget, granule, dists, np_q, phi) == 1
+    else:
+        np_q = (quantize_divisor(np_raw, extent, multiple_of=n_workers)
+                if policy.quantize else np_raw)
     part = sum(phi(granule, d, np_q) for d in dists)
     shard = -(-max(1, workload.state_bytes) // np_q)
+    detail: Dict[str, Any] = {
+        "tcl_level": child.name,
+        "sharded_bytes": workload.state_bytes,
+        "replicated_bytes": workload.replicated_bytes,
+        "shard_bytes": shard,
+        "overhead": workload.overhead,
+    }
+    if workload.kv_heads > 0:
+        detail["kv_heads"] = workload.kv_heads
+        detail["kv_shard"] = np_q
     return LevelPlan(
         level=level.name, kind="mesh", phi="phi_mesh",
         budget_bytes=budget, granule_bytes=granule,
         n_workers=max(1, n_workers), extent=extent,
         np_raw=np_raw, np=np_q, partition_bytes=part, fits=fits,
-        detail={
-            "tcl_level": child.name,
-            "sharded_bytes": workload.state_bytes,
-            "replicated_bytes": workload.replicated_bytes,
-            "shard_bytes": shard,
-            "overhead": workload.overhead,
-        },
+        detail=detail,
     )
 
 
@@ -431,6 +510,70 @@ def _plan_tile_level(level: MemoryLevel, workload: Workload,
         detail={"tile": {f: getattr(tile, f) for f in (
             "m", "k", "n", "bm", "bk", "bn", "order", "np",
             "est_vmem_bytes", "strategy")}},
+    )
+
+
+def _plan_page_level(level: MemoryLevel, workload: Workload,
+                     policy: PlanPolicy, n_workers: int,
+                     kv_shard: int = 1) -> LevelPlan:
+    """The decode KV page search (``repro.serve``): Algorithm 1 over one
+    sequence's resident token range.
+
+    The streamed working set of one decode attention step is one layer's
+    KV slice of one sequence after head sharding, so the domain element is
+    ``kv_bytes_per_token / (kv_layers * kv_shard)`` bytes and the search
+    partitions ``max_tokens`` of them until one partition -- a *page*,
+    sublane-aligned and double-buffered -- fits the leaf budget.  The
+    smallest np that fits gives the largest page, i.e. the fewest
+    page-boundary crossings per token, exactly the paper's "largest
+    partition that still fits the TCL" optimality argument.
+    """
+    budget = int(level.per_core_size() * policy.vmem_fraction)
+    granule = level.cache_line_size or DEFAULT_GRANULE
+    layers = max(1, workload.kv_layers)
+    tok_bytes = max(1, -(-workload.kv_bytes_per_token
+                         // (layers * max(1, kv_shard))))
+    tokens = max(PAGE_ALIGN, workload.max_tokens)
+    dist = Array1DDistribution(length=tokens, element_size=tok_bytes)
+
+    def phi_page(_line: int, d: Distribution, np_: int) -> float:
+        toks = -(-math.ceil(d.get_average_partition_size(np_))
+                 // PAGE_ALIGN) * PAGE_ALIGN
+        return float(PAGE_BUFFERING * toks * d.get_element_size())
+
+    try:
+        # The mesh partitioning was already consumed by the per-shard
+        # element size (``/ kv_shard``): the page search covers ONE
+        # sequence's per-chip stream, so it starts at a single partition
+        # rather than inheriting the mesh np as a lower bound -- a
+        # per-shard slice that fits whole gets exactly one page.
+        np_raw = find_optimal_np(budget, granule, [dist], 1,
+                                 phi_page, max_np=tokens)
+        fits = True
+    except NoValidDecomposition:
+        # Even a single sublane group of tokens overflows the leaf: page at
+        # the alignment floor and record the miss.
+        np_raw, fits = -(-tokens // PAGE_ALIGN), False
+    per_partition = -(-tokens // np_raw)
+    page_tokens = -(-per_partition // PAGE_ALIGN) * PAGE_ALIGN
+    page_bytes = page_tokens * tok_bytes
+    n_pages = -(-tokens // page_tokens)
+    return LevelPlan(
+        level=level.name, kind="page", phi="phi_page",
+        budget_bytes=budget, granule_bytes=granule,
+        n_workers=max(1, n_workers), extent=n_pages,
+        np_raw=np_raw, np=n_pages,
+        partition_bytes=float(PAGE_BUFFERING * page_bytes), fits=fits,
+        detail={"page": {
+            "page_tokens": page_tokens,
+            "page_bytes": page_bytes,
+            "tok_bytes": tok_bytes,
+            "tokens": tokens,
+            "layers": layers,
+            "kv_shard": max(1, kv_shard),
+            "align": PAGE_ALIGN,
+            "buffering": PAGE_BUFFERING,
+        }},
     )
 
 
@@ -485,6 +628,7 @@ def plan_run(hierarchy: MemoryLevel, workload: Workload,
     """
     nodes: List[LevelPlan] = []
     np_thread = max(1, policy.n_workers)
+    kv_shard = 1
     level: Optional[MemoryLevel] = hierarchy
     while level is not None:
         kind = _classify(level, workload, policy)
@@ -492,6 +636,8 @@ def plan_run(hierarchy: MemoryLevel, workload: Workload,
             node = _plan_mesh_level(level, workload, policy, np_thread)
             nodes.append(node)
             np_thread = node.np
+            if "kv_shard" in node.detail:
+                kv_shard = int(node.detail["kv_shard"])
             nxt = level.child
             if nxt is not None and nxt.name not in MESH_LEVEL_NAMES:
                 copies = max(1, len(nxt.siblings))   # the consumed TCL level
@@ -503,6 +649,11 @@ def plan_run(hierarchy: MemoryLevel, workload: Workload,
             node = _plan_tile_level(level, workload, policy, np_thread)
             nodes.append(node)
             np_thread = node.np
+        elif kind == "page":
+            node = _plan_page_level(level, workload, policy, np_thread,
+                                    kv_shard)
+            nodes.append(node)
+            np_thread = node.np_raw
         elif kind == "cache":
             node = _plan_cache_level(level, workload, policy, np_thread)
             nodes.append(node)

@@ -47,7 +47,7 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 from functools import lru_cache
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -292,6 +292,113 @@ def make_ag_matmul(mesh: Mesh, axis: str = "model", mode: str = "ring",
     return ag_matmul
 
 
+def make_ag_matmul_fused(mesh: Mesh, axis: str = "model", mode: str = "ring",
+                         n_out: int = 2, batch_axes: Tuple[str, ...] = ()):
+    """Fused all-gather matmuls: several column-parallel projections of the
+    SAME input share one ring (first bullet of the ROADMAP overlap item).
+
+    q/k/v (and the SwiGLU wg/wi) each used to issue an independent
+    all-gather ring over the same ``x``: p-1 hops of the identical k-chunk
+    per projection.  Here the chunk hops ONCE per ring step and every step
+    multiplies it against the matching row band of *each* weight shard --
+    ``n_out`` dots per hop, one stream of ``x`` per block.  Outputs are
+    each n-sharded over ``axis``, exactly as the unfused kernels produce,
+    and each ``y_i == x @ w_i`` globally (same per-column accumulation
+    order, so the fusion is bitwise-identical to the unfused rings).
+
+    Serpentine mode streams the two chunk halves in both ICI directions as
+    in ``make_ag_matmul`` (``2 * n_out`` half-chunk dots per step).
+    """
+    p = dict(mesh.shape)[axis]
+    plan = plan_ring(p, mode)
+    d = _batch_extent(mesh, batch_axes)
+    lead = _lead_spec(batch_axes)
+
+    def ag_local(x_blk: jax.Array, *w_blks: jax.Array):
+        m, kb = x_blk.shape
+        idx = jax.lax.axis_index(axis)
+        accs = tuple(
+            jnp.zeros((m, w.shape[1]),
+                      jnp.promote_types(x_blk.dtype, w.dtype))
+            for w in w_blks)
+
+        def rows_for(w_blk, src, col0, width):
+            return jax.lax.dynamic_slice(
+                w_blk, (src * kb + col0, 0), (width, w_blk.shape[1]))
+
+        if not plan.bidirectional:
+            offs = jnp.asarray(plan.fwd_offsets, jnp.int32)
+
+            def compute(chunk, accs, off):
+                src = (idx - off) % p
+                return tuple(
+                    acc + _block_matmul(chunk, rows_for(w, src, 0, kb))
+                    for acc, w in zip(accs, w_blks))
+
+            def step(carry, off):
+                chunk, accs = carry
+                accs = compute(chunk, accs, off)
+                chunk = jax.lax.ppermute(chunk, axis, plan.fwd_perm)
+                return (chunk, accs), None
+
+            (chunk, accs), _ = jax.lax.scan(step, (x_blk, accs), offs[:-1])
+            return compute(chunk, accs, offs[-1])
+
+        half = kb // 2
+        f_offs = jnp.asarray(plan.fwd_offsets, jnp.int32)
+        b_offs = jnp.asarray(plan.bwd_offsets, jnp.int32)
+
+        def compute(lo, hi, accs, off_f, off_b):
+            src_f = (idx - off_f) % p
+            src_b = (idx - off_b) % p
+            return tuple(
+                acc + _block_matmul(lo, rows_for(w, src_f, 0, half))
+                + _block_matmul(hi, rows_for(w, src_b, half, kb - half))
+                for acc, w in zip(accs, w_blks))
+
+        def step(carry, offs_s):
+            lo, hi, accs = carry
+            off_f, off_b = offs_s
+            accs = compute(lo, hi, accs, off_f, off_b)
+            lo = jax.lax.ppermute(lo, axis, plan.fwd_perm)
+            hi = jax.lax.ppermute(hi, axis, plan.bwd_perm)
+            return (lo, hi, accs), None
+
+        (lo, hi, accs), _ = jax.lax.scan(
+            step, (x_blk[:, :half], x_blk[:, half:], accs),
+            (f_offs[:-1], b_offs[:-1]))
+        return compute(lo, hi, accs, f_offs[-1], b_offs[-1])
+
+    sharded = shard_map(
+        ag_local, mesh=mesh,
+        in_specs=(P(lead, axis),) + (P(None, axis),) * n_out,
+        out_specs=tuple(P(lead, axis) for _ in range(n_out)),
+        check_rep=False,
+    )
+
+    @jax.jit
+    def ag_matmul_fused(x: jax.Array, *ws: jax.Array):
+        if len(ws) != n_out:
+            raise ValueError(f"expected {n_out} weights, got {len(ws)}")
+        for w in ws:
+            if x.shape[1] != w.shape[0]:
+                raise ValueError(
+                    f"contraction mismatch: x {x.shape} @ w {w.shape}")
+            _check_div("n", w.shape[1], p)
+        _check_div("k", x.shape[1], p)
+        if d > 1:
+            _check_div("m", x.shape[0], d, f"batch axes {batch_axes!r}")
+        if plan.bidirectional and (x.shape[1] // p) % 2 != 0:
+            raise ValueError(
+                f"serpentine all-gather needs an even per-chip k chunk: "
+                f"k={x.shape[1]} over the {p}-way ring leaves "
+                f"kb={x.shape[1] // p} (odd); pad k to a multiple of "
+                f"{2 * p} or use mode='ring'")
+        return sharded(x, *ws)
+
+    return ag_matmul_fused
+
+
 # ---------------------------------------------------------------------------
 # Reduce-scatter matmul
 # ---------------------------------------------------------------------------
@@ -415,8 +522,12 @@ def ring_kernel(mesh: Mesh, axis: str, kind: str, mode: str,
     (mesh, axis, kind, mode, batch_axes) -- the model forward asks for a
     kernel once per projection per trace, so the factory must not rebuild
     (and the LRU bound evicts kernels of meshes long gone, e.g. across
-    elastic restarts).  ``kind`` is "ag" (all-gather) or "rs"
-    (reduce-scatter)."""
+    elastic restarts).  ``kind`` is "ag" (all-gather), "rs"
+    (reduce-scatter), or "agf<N>" (N-output fused all-gather)."""
+    if kind.startswith("agf"):
+        return make_ag_matmul_fused(mesh, axis=axis, mode=mode,
+                                    n_out=int(kind[3:]),
+                                    batch_axes=batch_axes)
     make = make_ag_matmul if kind == "ag" else make_rs_matmul
     return make(mesh, axis=axis, mode=mode, batch_axes=batch_axes)
 
@@ -463,3 +574,33 @@ def overlap_matmul(x: jax.Array, w: jax.Array,
         raise ValueError(f"parallel must be 'column' or 'row', got {parallel!r}")
     y = ring_kernel(mesh, axis, kind, mode, batch_axes)(x.reshape(m, k), w)
     return y.reshape(*lead, n)
+
+
+def overlap_matmul_fused(x: jax.Array,
+                         ws: Sequence[jax.Array]) -> Optional[list]:
+    """Route several column-parallel projections of the same ``x`` through
+    ONE all-gather ring (``make_ag_matmul_fused``): the q/k/v and SwiGLU
+    fusion ``models/layers.py`` asks for.  Returns the list of outputs, or
+    None when the caller should fall back to per-weight ``tp_matmul`` --
+    no active overlap context, a degenerate ring, or any shape that does
+    not divide it (the same guards as ``overlap_matmul``, applied to every
+    weight)."""
+    from repro.dist.sharding import active_overlap
+
+    ctx = active_overlap()
+    if ctx is None or len(ws) < 2:
+        return None
+    mesh, axis, mode, batch_axes = ctx
+    p = dict(mesh.shape).get(axis, 1)
+    if p <= 1:
+        return None
+    lead, k = x.shape[:-1], x.shape[-1]
+    m = math.prod(lead) if lead else 1
+    d = _batch_extent(mesh, batch_axes)
+    if k % p or m % d or (mode == "serpentine" and (k // p) % 2):
+        return None
+    if any(w.shape[0] != k or w.shape[-1] % p for w in ws):
+        return None
+    fn = ring_kernel(mesh, axis, f"agf{len(ws)}", mode, batch_axes)
+    ys = fn(x.reshape(m, k), *ws)
+    return [y.reshape(*lead, w.shape[-1]) for y, w in zip(ys, ws)]

@@ -390,6 +390,45 @@ def with_collectives(rules: ShardingRules, mode: str,
                          meta=meta)
 
 
+def resolve_collectives(rules: ShardingRules, mode: str) -> ShardingRules:
+    """Resolve a collectives request ("auto" included) against the mesh
+    decomposition -- the one policy shared by the train and serve step
+    factories.
+
+    "auto" enables the serpentine overlap exactly when the mesh-level
+    decomposer chose FSDP (``rules.meta["fsdp"]``): that is the regime
+    where every step re-gathers parameter shards over the wire, so hiding
+    the transfers behind the ring matmuls pays (DESIGN.md §5).  Explicit
+    "ring"/"serpentine" always apply; "gspmd" leaves XLA's defaults.
+    """
+    if mode == "auto":
+        mode = "serpentine" if rules.meta.get("fsdp") else "gspmd"
+    if mode != "gspmd":
+        rules = with_collectives(rules, mode)
+    return rules
+
+
+def with_kv_sharding(rules: ShardingRules, kv_shard: int,
+                     axis: str = "model") -> ShardingRules:
+    """KV-cache sharding from the decode plan's mesh level (``repro.serve``).
+
+    The hierarchical planner's decode workload records the KV head shard
+    degree it chose at the innermost mesh level
+    (``HierarchicalPlan.kv_shard()``: the full ``axis`` extent when the
+    memory search demanded sharding and the head count divides it, else
+    1).  This rewrites the activation rules so the lowered cache layout
+    realizes exactly that choice: heads sharded over ``axis`` when
+    ``kv_shard > 1``, fully replicated KV otherwise -- and never the
+    legacy auto-policy's sequence fallback, which the plan does not model.
+    """
+    ar = dict(rules.act_rules)
+    ar["kv_heads"] = axis if kv_shard > 1 else None
+    ar["kv_seq"] = None
+    meta = dict(rules.meta)
+    meta["kv_shard"] = int(kv_shard)
+    return ShardingRules(dict(rules.param_rules), ar, meta=meta)
+
+
 def with_batch_guard(rules: ShardingRules, mesh, global_batch: int) -> ShardingRules:
     """Trim the batch rule to the mesh axes whose product divides the global
     batch (a batch that cannot split evenly replicates instead of erroring)."""

@@ -245,6 +245,56 @@ def calibrate_cell(arch: str, shape_name: str, multi_pod: bool = False,
             "calibration_ratio": ratio, "overhead": cfg.overhead}
 
 
+def write_calibration(records: list, path: str = None) -> str:
+    """Fold per-cell calibration records into the calibration artifact
+    ``ModelConfig.overhead`` defaults from (``configs.base``).
+
+    ``est = overhead * phi_mesh_terms``, so the overhead that would make
+    the estimate meet the worst observed cell is ``overhead / min(ratio)``;
+    clamped at 1.0 (phi never *undershoots* on purpose).  Existing entries
+    for other archs are preserved (the artifact accumulates across
+    partial ``--arch`` runs).
+    """
+    from repro.configs.base import calibration_path
+
+    path = path or calibration_path()
+    existing = {}
+    try:
+        with open(path) as f:
+            existing = json.load(f)
+    except (OSError, ValueError):
+        pass
+    by_arch = {}
+    for rec in records:
+        by_arch.setdefault(rec["arch"], []).append(rec)
+    for arch, recs in by_arch.items():
+        finite = [r for r in recs
+                  if r["calibration_ratio"] not in (0, float("inf"))]
+        if not finite:
+            continue
+        worst = min(finite, key=lambda r: r["calibration_ratio"])
+        suggested = max(1.0, worst["overhead"] / worst["calibration_ratio"])
+        existing[arch] = {
+            "overhead": round(suggested, 3),
+            "worst_ratio": round(worst["calibration_ratio"], 4),
+            "worst_cell": f"{worst['shape']}@{worst['mesh']}",
+            "cells": len(recs),
+        }
+    existing["_meta"] = {
+        "source": "launch/dryrun.py --calibrate",
+        "note": "overhead = registered_overhead / min(phi_mesh_est / "
+                "hlo_peak); consumed by configs.base.get_model_config "
+                "for archs whose registered overhead is the 1.0 default",
+    }
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(existing, f, indent=1, sort_keys=True)
+    print(f"[cal] wrote {path} ({len(by_arch)} arch(es))")
+    return path
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="all")
@@ -258,8 +308,13 @@ def main() -> int:
                     help="print each cell's hierarchical plan (repro.plan) "
                          "and exit -- no lowering")
     ap.add_argument("--calibrate", action="store_true",
-                    help="lower + compile each cell and print the phi_mesh "
-                         "vs HLO-memory calibration ratio")
+                    help="lower + compile each cell, print the phi_mesh vs "
+                         "HLO-memory calibration ratio, and fold the "
+                         "results into experiments/calibration.json (the "
+                         "artifact ModelConfig.overhead defaults from)")
+    ap.add_argument("--calibration-out", default=None,
+                    help="override the calibration artifact path "
+                         "(default: configs.base.calibration_path())")
     args = ap.parse_args()
 
     archs = list_archs() if args.arch == "all" else [args.arch]
@@ -276,17 +331,20 @@ def main() -> int:
 
     if args.calibrate:
         n_fail = 0
+        records = []
         for arch in archs:
             for shape_name in shapes:
                 if skip_reason(arch, shape_name):
                     continue
                 for multi_pod in meshes:
                     try:
-                        calibrate_cell(arch, shape_name, multi_pod,
-                                       out_root=args.out)
+                        records.append(calibrate_cell(
+                            arch, shape_name, multi_pod, out_root=args.out))
                     except Exception as e:
                         n_fail += 1
                         print(f"[cal-FAIL] {arch} x {shape_name}: {e}")
+        if records:
+            write_calibration(records, path=args.calibration_out)
         return 1 if n_fail else 0
 
     out_dir = args.out or os.path.abspath(RESULTS_DIR)

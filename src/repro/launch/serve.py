@@ -1,5 +1,10 @@
-"""Serving launcher: batched prefill + decode with the family-appropriate
-cache. ``python -m repro.launch.serve --arch <id> --tokens 32``."""
+"""Serving launcher: a thin CLI over ``repro.serve.ServeEngine``.
+
+``python -m repro.launch.serve --arch <id> --tokens 32`` (also installed as
+the ``repro-serve`` console script).  Every batch/page/shard choice falls
+out of the hierarchical planner's decode workload (DESIGN.md §7): the CLI
+only names the architecture, the prompt mix, and the sampling config.
+"""
 
 from __future__ import annotations
 
@@ -9,56 +14,79 @@ import time
 
 def main(argv=None) -> int:
     import jax
-    import jax.numpy as jnp
     import numpy as np
 
     from repro.configs import get_model_config, parse_cli
-    from repro.configs.base import ShapeConfig
     from repro.launch.mesh import make_host_mesh
-    from repro.launch.specs import make_batch
-    from repro.launch.trainer import make_serve_steps
+    from repro.serve import SamplingConfig, ServeEngine, ServePolicy
 
     overrides, _ = parse_cli(argv if argv is not None else sys.argv[1:])
     arch = overrides.pop("arch", "llama3.2-1b")
     n_new = int(overrides.pop("tokens", "16"))
     batch = int(overrides.pop("batch", "4"))
     prompt_len = int(overrides.pop("prompt_len", "64"))
+    mixed = overrides.pop("mixed", "0").lower() in ("1", "true", "yes")
+    kind = overrides.pop("sampling", "greedy")
+    temperature = float(overrides.pop("temperature", "1.0"))
+    top_k = int(overrides.pop("top_k", "0"))
+    seed = int(overrides.pop("seed", "0"))
 
     cfg = get_model_config(arch).reduced()
-    shape = ShapeConfig("serve", prompt_len, batch, "decode")
-    mesh = make_host_mesh()
-    ss = make_serve_steps(cfg, shape, mesh, dtype=jnp.float32,
-                          max_len_extra=n_new + 1)
+    sampling = SamplingConfig(kind=kind, temperature=temperature,
+                              top_k=top_k or (40 if kind == "top_k" else 0),
+                              seed=seed)
+    engine = ServeEngine(
+        cfg, make_host_mesh(),
+        policy=ServePolicy(max_new_tokens=n_new, max_slots=max(1, batch),
+                           max_len=prompt_len + n_new + 1,
+                           sampling=sampling),
+        dtype=jax.numpy.float32)
 
-    rng = np.random.default_rng(0)
-    params = ss.model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
-    prompt = make_batch(cfg, shape, rng, kind="train")
-    prompt.pop("labels", None)
+    rng = np.random.default_rng(seed)
+    prompts = []
+    for i in range(batch):
+        plen = prompt_len if not mixed else max(8, prompt_len // (1 + i % 2))
+        prompts.append(engine_prompt(cfg, plen, rng))
 
     t0 = time.perf_counter()
-    logits, cache = ss.prefill(params, prompt)
-    logits.block_until_ready()
-    t_prefill = time.perf_counter() - t0
+    outs = engine.generate(prompts)
+    dt = time.perf_counter() - t0
 
-    toks = []
-    t0 = time.perf_counter()
-    for i in range(n_new):
-        nxt = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        step = {"tokens": nxt}
-        if cfg.family == "vlm":
-            step["positions_3d"] = jnp.broadcast_to(
-                cache["pos"][None, None, None], (3, batch, 1)).astype(jnp.int32)
-        logits, cache = ss.decode(params, cache, step)
-        toks.append(np.asarray(nxt[:, 0]))
-    jax.block_until_ready(logits)
-    t_decode = time.perf_counter() - t0
-
-    print(f"[serve] arch={arch} batch={batch} prompt={prompt_len}")
-    print(f"[serve] prefill {t_prefill * 1e3:.1f} ms; "
-          f"decode {t_decode / n_new * 1e3:.2f} ms/token "
-          f"({batch * n_new / t_decode:.1f} tok/s)")
-    print(f"[serve] sample continuation ids: {[int(t[0]) for t in toks[:8]]}")
+    n_tok = sum(len(o) for o in outs)
+    m = engine.metrics
+    print(f"[serve] arch={arch} requests={batch} prompt={prompt_len}"
+          f"{' (mixed)' if mixed else ''} sampling={kind}")
+    print(f"[serve] plan: page_tokens={m['page_tokens']} "
+          f"page_bytes={m['page_bytes']} kv_shard={m['kv_shard']} "
+          f"budget={m['budget_bytes'] / 2**30:.1f}GiB")
+    print(f"[serve] {n_tok} tokens in {dt:.2f}s ({n_tok / max(dt, 1e-9):.1f} "
+          f"tok/s); cohorts={m['cohorts']} decode_steps={m['decode_steps']} "
+          f"evictions={m['evictions']} "
+          f"peak_resident={m.get('peak_resident_bytes', 0)}B")
+    print(f"[serve] sample continuation ids: {outs[0][:8]}")
     return 0
+
+
+def engine_prompt(cfg, prompt_len: int, rng):
+    """A synthetic prompt in the family's input format (frontend stubs per
+    the assignment: VLM/audio cells receive precomputed embeddings)."""
+    import numpy as np
+
+    if cfg.family == "vlm":
+        return {
+            "embeds": (rng.standard_normal((prompt_len, cfg.d_model))
+                       .astype(np.float32) * 0.02),
+            "positions_3d": np.broadcast_to(
+                np.arange(prompt_len, dtype=np.int32)[None], (3, prompt_len)),
+        }
+    if cfg.family == "enc_dec":
+        return {
+            "enc_embeds": (rng.standard_normal((prompt_len, cfg.d_model))
+                           .astype(np.float32) * 0.02),
+            "tokens": rng.integers(0, cfg.vocab_size, prompt_len,
+                                   dtype=np.int32),
+        }
+    return rng.integers(0, cfg.vocab_size, prompt_len, dtype=np.int32)
 
 
 if __name__ == "__main__":

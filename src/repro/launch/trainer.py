@@ -1,12 +1,13 @@
-"""Distributed training/serving step factories + the training loop.
+"""Distributed training step factory + the training loop.
 
 ``make_train_step`` builds the jitted SPMD step for any (arch x mesh):
 params/optimizer FSDP+TP sharded via the logical rules, batch sharded over
 the data axes, microbatch gradient accumulation, optional gradient
 compression on the wire, AdamW update, donated buffers.
 
-``make_serve_steps`` builds the prefill + single-token decode steps with the
-family-appropriate cache (donated so decoding is in-place).
+The serve-step factory moved to ``repro.serve.steps`` (the serving stack
+is owned by ``repro.serve`` -- DESIGN.md §7); ``ServeSteps`` and
+``make_serve_steps`` are re-exported here for back-compat.
 
 The Trainer class wires in the fault-tolerance substrate: async keep-k
 checkpoints, preemption drain, step watchdog + straggler policy, and
@@ -32,6 +33,7 @@ from repro.dist.sharding import (
     default_rules,
     logical_sharding,
     param_shardings,
+    resolve_collectives,
     use_mesh_rules,
     with_batch_guard,
     with_collectives,
@@ -39,12 +41,9 @@ from repro.dist.sharding import (
 from repro.launch.specs import (
     activation_footprint,
     batch_logical_axes,
-    cache_logical_axes,
-    decode_batch_specs,
-    decode_footprint,
-    train_batch_specs,
 )
 from repro.models.model import Model, build_model
+from repro.serve.steps import ServeSteps, make_serve_steps  # noqa: F401  (back-compat)
 from repro.models.params import param_axes
 from repro.optim import (
     OptState,
@@ -62,20 +61,9 @@ def _dtype(name: str):
             "float16": jnp.float16}[name]
 
 
-def _apply_collectives(rules: ShardingRules, mode: str) -> ShardingRules:
-    """Resolve a collectives request against the mesh decomposition.
-
-    "auto" enables the serpentine overlap exactly when the mesh-level
-    decomposer chose FSDP (``rules.meta["fsdp"]``): that is the regime where
-    every step re-gathers parameter shards over the wire, so hiding the
-    transfers behind the ring matmuls pays (DESIGN.md §5).  Explicit
-    "ring"/"serpentine" always apply; "gspmd" leaves XLA's defaults.
-    """
-    if mode == "auto":
-        mode = "serpentine" if rules.meta.get("fsdp") else "gspmd"
-    if mode != "gspmd":
-        rules = with_collectives(rules, mode)
-    return rules
+#: "auto" -> serpentine iff the decomposer chose FSDP; shared with the
+#: serve-step factory (the one place the policy lives: dist.sharding).
+_apply_collectives = resolve_collectives
 
 
 # ---------------------------------------------------------------------------
@@ -212,123 +200,6 @@ def init_sharded_state(ts: TrainStep, mesh: Mesh, seed: int,
         return params, opt
 
     return init(jax.random.PRNGKey(seed))
-
-
-# ---------------------------------------------------------------------------
-# Serve steps
-# ---------------------------------------------------------------------------
-
-
-@dataclass
-class ServeSteps:
-    prefill: Callable               # (params, batch) -> (logits, cache)
-    decode: Callable                # (params, cache, batch) -> (logits, cache)
-    param_sharding: PyTree
-    cache_sharding: PyTree
-    model: Model
-
-
-def make_serve_steps(
-    cfg: ModelConfig,
-    shape: ShapeConfig,
-    mesh: Mesh,
-    rules: Optional[ShardingRules] = None,
-    dtype=jnp.bfloat16,
-    jit: bool = True,
-    max_len_extra: int = 0,
-    weights_tp_only: bool = False,
-    cache_head_sharded: bool = False,
-    cache_seq_sharded: bool = False,
-    cache_policy: str = "auto",
-    collectives: str = "gspmd",
-    plan: Optional[Any] = None,
-) -> ServeSteps:
-    """Serve-step factory. ``cache_policy="auto"`` applies the §Perf-winning
-    placement: shard the KV cache over heads when kv_heads divides the
-    model axis (attention stays shard-local, zero cache collectives, cell
-    3: -93% bound), else over the sequence dim with grouped-GQA decode
-    (cell 2: -80% bound); explicit ``cache_head_sharded`` /
-    ``cache_seq_sharded`` flags override (used by the baseline dry-run via
-    ``cache_policy="baseline"`` and by perf_iter)."""
-    model_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
-    heads_divide = cfg.n_kv_heads % model_size == 0
-    # The sharded buffer is the padded cache (seq_len + extra) -- pjit
-    # in/out shardings require exact divisibility.
-    seq_divides = (shape.seq_len + max_len_extra) % model_size == 0
-    if cache_policy == "auto" and not (cache_head_sharded or cache_seq_sharded):
-        if not heads_divide and seq_divides and shape.kind == "decode":
-            cache_seq_sharded = True
-        elif heads_divide:
-            cache_head_sharded = True
-    long_context = shape.seq_len >= 262144 or cache_seq_sharded
-    if cache_head_sharded and heads_divide:
-        # Head sharding: attention local per head shard, no distributed
-        # softmax; preferred whenever the head count divides the axis.
-        long_context = False
-    if rules is None:
-        # Serving memory model: bf16 weights only (no master copy /
-        # moments), and the KV cache as the reserved term -- it shards over
-        # both the batch (data) and head (model) axes, so the global
-        # footprint divides by the full mesh.
-        rules = arch_rules(
-            cfg, mesh, seq_sharded=long_context,
-            state_bytes_per_param=2,
-            act_bytes=decode_footprint(
-                cfg, shape, shape.seq_len + max_len_extra) // mesh.size,
-            plan=plan)
-    rules = with_batch_guard(rules, mesh, shape.global_batch)
-    rules = _apply_collectives(rules, collectives)
-    if weights_tp_only:
-        # Perf variant: serving replicates weights across the data axes
-        # (memory permitting) so no per-step FSDP all-gather is emitted.
-        pr = dict(rules.param_rules)
-        pr["embed"] = None
-        rules = ShardingRules(pr, dict(rules.act_rules), meta=dict(rules.meta))
-    model = build_model(cfg, remat="none")
-    specs = model.param_specs()
-    p_shard = param_shardings(mesh, rules, specs)
-    max_len = shape.seq_len + max_len_extra
-
-    cache_tpl = jax.eval_shape(
-        lambda: model.init_cache(shape.global_batch, max_len, dtype,
-                                 enc_len=shape.seq_len))
-    c_axes = cache_logical_axes(cfg, cache_tpl, long_context)
-    c_shard = jax.tree.map(
-        lambda ax: NamedSharding(mesh, rules.act_spec(ax)),
-        c_axes,
-        is_leaf=lambda x: isinstance(x, tuple) and all(
-            a is None or isinstance(a, str) for a in x),
-    )
-    d_axes = batch_logical_axes(cfg, "decode")
-    d_shard = {k: NamedSharding(mesh, rules.act_spec(v))
-               for k, v in d_axes.items()}
-    t_axes = batch_logical_axes(cfg, "train")
-    t_shard = {k: NamedSharding(mesh, rules.act_spec(v))
-               for k, v in t_axes.items() if k != "labels"}
-
-    def prefill_fn(params, batch):
-        with use_mesh_rules(mesh, rules):
-            return model.prefill(params, batch, max_len, dtype=dtype)
-
-    def decode_fn(params, cache, batch):
-        with use_mesh_rules(mesh, rules):
-            return model.decode_step(params, cache, batch, dtype=dtype)
-
-    if jit:
-        prefill_fn = jax.jit(
-            prefill_fn,
-            in_shardings=(p_shard, t_shard),
-            out_shardings=(None, c_shard),
-        )
-        decode_fn = jax.jit(
-            decode_fn,
-            in_shardings=(p_shard, c_shard, d_shard),
-            out_shardings=(None, c_shard),
-            donate_argnums=(1,),
-        )
-    return ServeSteps(prefill=prefill_fn, decode=decode_fn,
-                      param_sharding=p_shard, cache_sharding=c_shard,
-                      model=model)
 
 
 # ---------------------------------------------------------------------------

@@ -11,7 +11,10 @@ realization of the paper's partition streams (Fig. 2).
 Every tensor-parallel projection (attention q/k/v/o, the SwiGLU FFN, the
 LM head) goes through ``tp_matmul``, which routes to the overlap layer's
 ring/serpentine collective matmuls when the active sharding rules request
-them (DESIGN.md §5) and stays a plain einsum otherwise.
+them (DESIGN.md §5) and stays a plain einsum otherwise.  Projections that
+share an input -- q/k/v, the SwiGLU wg/wi pair -- go through
+``fused_column_matmul`` so ``x`` streams around the ring once per block,
+not once per projection.
 """
 
 from __future__ import annotations
@@ -49,6 +52,26 @@ def tp_matmul(x: jax.Array, w: jax.Array, parallel: str) -> jax.Array:
     if y is None:
         y = jnp.einsum("...k,kn->...n", x, w)
     return y
+
+
+def fused_column_matmul(x: jax.Array, ws) -> list:
+    """Several column-parallel projections of the same ``x``, one ring.
+
+    Under ring/serpentine rules the q/k/v (and SwiGLU wg/wi) projections
+    each streamed ``x`` around the ICI ring independently; fusing them into
+    ``dist.overlap.make_ag_matmul_fused`` hops the k-chunk ONCE per ring
+    step and runs one dot per weight per hop, so ``x`` streams through the
+    ring once per block instead of once per projection (ROADMAP overlap
+    item).  Bitwise-identical to the per-weight rings (same per-column
+    accumulation order); falls back to per-weight ``tp_matmul`` under
+    GSPMD rules or non-dividing shapes.
+    """
+    from repro.dist.overlap import overlap_matmul_fused
+
+    ys = overlap_matmul_fused(x, tuple(ws))
+    if ys is None:
+        return [tp_matmul(x, w, "column") for w in ws]
+    return ys
 
 
 # ---------------------------------------------------------------------------
@@ -360,9 +383,9 @@ def attention_block(
 ) -> Tuple[jax.Array, Optional[dict]]:
     b, s, d = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    q = tp_matmul(x, params["wq"].astype(x.dtype), "column")
-    k = tp_matmul(x, params["wk"].astype(x.dtype), "column")
-    v = tp_matmul(x, params["wv"].astype(x.dtype), "column")
+    q, k, v = fused_column_matmul(x, (params["wq"].astype(x.dtype),
+                                      params["wk"].astype(x.dtype),
+                                      params["wv"].astype(x.dtype)))
     if cfg.qkv_bias:
         q = q + params["bq"].astype(x.dtype)
         k = k + params["bk"].astype(x.dtype)
@@ -447,8 +470,8 @@ def ffn_param_specs(cfg: ModelConfig, d_ff: Optional[int] = None, layers: int = 
 
 
 def swiglu_ffn(params: dict, x: jax.Array) -> jax.Array:
-    g = tp_matmul(x, params["wg"].astype(x.dtype), "column")
-    u = tp_matmul(x, params["wi"].astype(x.dtype), "column")
+    g, u = fused_column_matmul(x, (params["wg"].astype(x.dtype),
+                                   params["wi"].astype(x.dtype)))
     return tp_matmul(jax.nn.silu(g) * u, params["wo"].astype(x.dtype), "row")
 
 

@@ -406,8 +406,10 @@ class Model:
         h, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
         q = L.tp_matmul(x, cp["wq"].astype(x.dtype), "column").reshape(b, s, h, hd)
         if kv is None:
-            k = L.tp_matmul(enc, cp["wk"].astype(x.dtype), "column").reshape(b, -1, nkv, hd)
-            v = L.tp_matmul(enc, cp["wv"].astype(x.dtype), "column").reshape(b, -1, nkv, hd)
+            k, v = L.fused_column_matmul(
+                enc, (cp["wk"].astype(x.dtype), cp["wv"].astype(x.dtype)))
+            k = k.reshape(b, -1, nkv, hd)
+            v = v.reshape(b, -1, nkv, hd)
         else:
             k, v = kv
         out = L.attention_op(q, k.astype(x.dtype), v.astype(x.dtype),

@@ -1,0 +1,44 @@
+"""``repro.serve`` -- the plan-driven serving engine (DESIGN.md §7).
+
+The only serving surface: ``ServeEngine(cfg, mesh, policy)`` owns the
+paged KV cache (page size from the hierarchical planner's decode
+workload), the continuous-batching scheduler (admission under the planned
+KV budget), and the sampling API.  ``launch/serve.py`` is a thin CLI over
+``ServeEngine.generate``; ``make_serve_steps`` (ex ``launch.trainer``)
+lives in ``repro.serve.steps``.
+"""
+
+from repro.serve.engine import (  # noqa: F401
+    ServeEngine,
+    ServePolicy,
+    plan_decode,
+)
+from repro.serve.kvcache import (  # noqa: F401
+    PageSpec,
+    align_capacity,
+    grow_cache,
+    kv_token_bytes,
+    page_spec_from_plan,
+    request_state_bytes,
+)
+from repro.serve.sampling import SamplingConfig, sample  # noqa: F401
+from repro.serve.scheduler import Request, ServeScheduler  # noqa: F401
+from repro.serve.steps import ServeSteps, make_serve_steps  # noqa: F401
+
+__all__ = [
+    "PageSpec",
+    "Request",
+    "SamplingConfig",
+    "ServeEngine",
+    "ServePolicy",
+    "ServeScheduler",
+    "ServeSteps",
+    "align_capacity",
+    "grow_cache",
+    "kv_token_bytes",
+    "make_serve_steps",
+    "page_spec_from_plan",
+    "plan_decode",
+    "request_state_bytes",
+    "sample",
+]

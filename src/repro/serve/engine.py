@@ -1,0 +1,451 @@
+"""``ServeEngine`` -- the plan-driven serving engine (the only serving
+surface; ``launch/serve.py`` is a thin CLI over it).
+
+One declarative call -- ``ServeEngine(cfg, mesh, policy).generate(prompts)``
+-- and every batch/page/shard choice falls out of ``plan_run``:
+
+  * ``plan_decode`` builds the decode workload (per-token KV bytes x heads
+    x layers, ``core.plan.Workload``) and walks the mesh hierarchy once.
+    The innermost mesh level chooses the **KV head sharding**
+    (``kv_shard``), the VMEM leaf the **page size** (``page_tokens``).
+  * ``serve.kvcache.PageSpec`` turns the page into the allocation granule;
+    cache buffers are whole pages, grown one page at a time.
+  * ``serve.scheduler.ServeScheduler`` admits/evicts requests so the
+    resident KV footprint never exceeds the planned budget (continuous
+    batching at cohort granularity, prefill/decode interleaved).
+  * ``serve.steps.make_serve_steps(..., decode_plan=...)`` lowers the steps
+    with exactly the plan's cache sharding.
+
+The batch unit is a *cohort* of same-shape prompts (the family decode step
+carries one scalar position per batch -- see ``serve.scheduler``); mixed
+prompt lengths run as concurrently decoded cohorts, one decode step per
+cohort per engine tick with admissions (prefills) interleaved in between.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.plan import HierarchicalPlan, PlanPolicy, Workload, plan_run
+from repro.serve.kvcache import (
+    PageSpec,
+    align_capacity,
+    cache_capacity,
+    grow_cache,
+    kv_token_bytes,
+    page_spec_from_plan,
+    request_state_bytes,
+    take_slots,
+)
+from repro.serve.sampling import SamplingConfig, sample, step_key
+from repro.serve.scheduler import Request, ServeScheduler
+from repro.serve.steps import ServeSteps, make_serve_steps
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# The decode plan
+# ---------------------------------------------------------------------------
+
+
+def plan_decode(
+    cfg: ModelConfig,
+    mesh,
+    *,
+    max_len: int = 4096,
+    batch: int = 1,
+    dtype_bytes: int = 2,
+    spec=None,
+    hierarchy=None,
+) -> HierarchicalPlan:
+    """``plan_run`` over the decode workload: the serving counterpart of
+    ``dist.sharding.mesh_plan``.
+
+    The mesh hierarchy's interconnect level spans the tensor-parallel
+    ("model") axis -- the axis KV heads can shard over; the KV cache's
+    batch dim already shards over the data axes, so the shardable state is
+    one data-shard's resident KV (``kv_bytes_per_token * max_len * batch /
+    data_n``) and the per-chip weight shard rides along as the replicated
+    reserve.  ``max_len`` bounds one sequence's resident tokens (the page
+    search domain) and ``batch`` the concurrently resident sequences.
+    """
+    sizes = dict(mesh.shape)
+    model_n = max(1, sizes.get("model", 1))
+    total = 1
+    for v in sizes.values():
+        total *= v
+    data_n = max(1, total // model_n)
+    tok_bytes, layers, heads = kv_token_bytes(cfg, dtype_bytes)
+    kv_state = (tok_bytes * max_len * batch) // data_n
+    weights = cfg.param_count() * dtype_bytes // model_n
+    stream = batch * cfg.d_model * dtype_bytes * 4
+    fixed = batch * request_state_bytes(cfg, enc_len=max_len,
+                                        dtype_bytes=dtype_bytes) // data_n
+    if hierarchy is None:
+        if spec is None:
+            from repro.hw.tpu import chip_spec
+            spec = chip_spec()
+        hierarchy = spec.hierarchy(mesh_devices=model_n)
+    return plan_run(
+        hierarchy,
+        Workload(
+            state_bytes=max(1, kv_state),
+            replicated_bytes=weights + stream + fixed,
+            overhead=cfg.overhead,
+            dtype_bytes=dtype_bytes,
+            kv_bytes_per_token=tok_bytes,
+            kv_layers=max(1, layers),
+            kv_heads=heads,
+            max_tokens=max_len,
+        ),
+        PlanPolicy(spec=spec),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ServePolicy:
+    """Engine knobs. Everything memory-shaped defaults from the plan; the
+    overrides exist for tests and for operators who know better."""
+
+    max_new_tokens: int = 16
+    max_slots: int = 8              # sequences per cohort
+    max_len: int = 4096             # per-sequence planning bound (tokens)
+    kv_fraction: float = 0.8        # share of post-weights HBM given to KV
+    kv_budget_bytes: Optional[int] = None   # override the planned budget
+    sampling: SamplingConfig = field(default_factory=SamplingConfig)
+
+
+@dataclass
+class _Run:
+    """Engine-side state of one admitted cohort."""
+
+    cid: int
+    reqs: List[Request]
+    steps: ServeSteps
+    cache: PyTree
+    next_tokens: Any                # (B, 1) int32 -- last sampled token
+    capacity: Optional[int]         # growable token capacity (None: fixed)
+    pos: int                        # tokens written so far per slot
+    active: Dict[int, int]          # rid -> slot index, still decoding
+
+
+class ServeEngine:
+    """Plan-driven serving engine (see module docstring)."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        mesh=None,
+        policy: ServePolicy = ServePolicy(),
+        dtype=None,
+        params: Optional[PyTree] = None,
+        seed: int = 0,
+        spec=None,
+        hierarchy=None,
+    ):
+        import jax
+        import jax.numpy as jnp
+
+        if mesh is None:
+            from repro.launch.mesh import make_host_mesh
+            mesh = make_host_mesh()
+        self.cfg = cfg
+        self.mesh = mesh
+        self.policy = policy
+        self.dtype = dtype if dtype is not None else jnp.float32
+        self._dtype_bytes = jnp.dtype(self.dtype).itemsize
+        self.plan = plan_decode(
+            cfg, mesh, max_len=policy.max_len,
+            batch=policy.max_slots, dtype_bytes=self._dtype_bytes,
+            spec=spec, hierarchy=hierarchy)
+        self.page: PageSpec = page_spec_from_plan(self.plan, cfg,
+                                                  self._dtype_bytes)
+        self.scheduler = ServeScheduler(
+            self._kv_budget(), self.page, max_slots=policy.max_slots)
+        from repro.models.model import build_model
+        self.model = build_model(cfg, remat="none")
+        self.params = (params if params is not None
+                       else self.model.init(jax.random.PRNGKey(seed),
+                                            dtype=jnp.float32))
+        self._steps_cache: Dict[Any, ServeSteps] = {}
+        self._next_rid = 0
+        self.metrics: Dict[str, Any] = {
+            "page_tokens": self.page.page_tokens,
+            "page_bytes": self.page.page_bytes,
+            "budget_bytes": self.scheduler.budget_bytes,
+            "kv_shard": self.plan.kv_shard(),
+            "tokens": 0,
+            "decode_steps": 0,
+            "cohorts": 0,
+            "evictions": 0,
+            "capacities": [],
+        }
+
+    # ------------------------------------------------------------- plan reads
+    def _kv_budget(self) -> int:
+        """The fleet KV budget in the scheduler's *logical* bytes.
+
+        The scheduler bills each page once (logical bytes: tokens x global
+        per-token KV).  Physically the cache shards over the data axes but
+        replicates over the model axis wherever the plan left it unsharded
+        (``kv_shard < model_n``), so one logical byte costs
+        ``model_n / kv_shard`` physical bytes -- the fleet HBM headroom is
+        divided by that replication factor.  Weights are TP-sharded over
+        "model" and (in the serving memory model) replicated over the data
+        axes, so one weight copy per data shard is reserved first.
+        """
+        if self.policy.kv_budget_bytes is not None:
+            return int(self.policy.kv_budget_bytes)
+        ici = self.plan.level("ICI")
+        sizes = dict(self.mesh.shape)
+        n_dev = 1
+        for v in sizes.values():
+            n_dev *= v
+        model_n = max(1, sizes.get("model", 1))
+        data_n = max(1, n_dev // model_n)
+        hbm_total = (ici.budget_bytes if ici is not None
+                     else self.plan.leaf().budget_bytes) * n_dev
+        weights = self.cfg.param_count() * self._dtype_bytes * data_n
+        replication = max(1, model_n // max(1, self.plan.kv_shard()))
+        budget = int(self.policy.kv_fraction
+                     * max(0, hbm_total - weights) / replication)
+        return max(self.page.page_bytes, budget)
+
+    # --------------------------------------------------------------- requests
+    def _normalize_prompt(self, prompt) -> Dict[str, np.ndarray]:
+        if isinstance(prompt, dict):
+            return {k: np.asarray(v) for k, v in prompt.items()}
+        return {"tokens": np.asarray(prompt, dtype=np.int32)}
+
+    def _make_request(self, prompt, max_new: int) -> Request:
+        feats = self._normalize_prompt(prompt)
+        if "tokens" in feats:
+            plen = int(feats["tokens"].shape[-1])
+        else:
+            plen = int(feats["embeds"].shape[0])
+        enc_len = (int(feats["enc_embeds"].shape[0])
+                   if "enc_embeds" in feats else 0)
+        rid = self._next_rid
+        self._next_rid += 1
+        # Fixed-extent caches (sliding-window rings) allocate their full
+        # window-clamped capacity at admission and never grow, so the slot
+        # must be billed for all of it up front; growable caches pin only
+        # prompt + the first decode page (the Request default).
+        admit_tokens = None
+        if not self._growable() and self.cfg.sliding_window:
+            admit_tokens = min(plen + max_new + 1, self.cfg.sliding_window)
+        return Request(
+            rid=rid, prompt_len=plen, max_new=max_new,
+            state_bytes=request_state_bytes(self.cfg, enc_len,
+                                            self._dtype_bytes),
+            features=feats, group=(plen, enc_len),
+            admit_tokens=admit_tokens)
+
+    # ------------------------------------------------------------------ steps
+    def _growable(self) -> bool:
+        tok_bytes, _, _ = kv_token_bytes(self.cfg, self._dtype_bytes)
+        return tok_bytes > 0 and not self.cfg.sliding_window
+
+    def _steps(self, n_slots: int, prompt_len: int, capacity: int
+               ) -> ServeSteps:
+        from repro.configs.base import ShapeConfig
+
+        key = (n_slots, prompt_len, capacity)
+        ss = self._steps_cache.get(key)
+        if ss is None:
+            shape = ShapeConfig("serve", prompt_len, n_slots, "decode")
+            ss = make_serve_steps(
+                self.cfg, shape, self.mesh, dtype=self.dtype,
+                max_len_extra=capacity - prompt_len,
+                decode_plan=self.plan)
+            self._steps_cache[key] = ss
+        return ss
+
+    # ---------------------------------------------------------------- prefill
+    def _stack_features(self, reqs: List[Request]) -> Dict[str, Any]:
+        import jax.numpy as jnp
+
+        keys = reqs[0].features.keys()
+        out = {}
+        for k in keys:
+            arrs = [r.features[k] for r in reqs]
+            axis = 1 if k == "positions_3d" else 0
+            out[k] = jnp.stack([jnp.asarray(a) for a in arrs], axis=axis)
+        if self.cfg.family == "vlm" and "positions_3d" not in out:
+            s = out["embeds"].shape[1] if "embeds" in out else \
+                out["tokens"].shape[1]
+            out["positions_3d"] = jnp.broadcast_to(
+                jnp.arange(s, dtype=jnp.int32)[None, None],
+                (3, len(reqs), s))
+        return out
+
+    def _prefill_cohort(self, cid: int, reqs: List[Request],
+                        outputs: Dict[int, List[int]],
+                        scfg: SamplingConfig, step: int) -> _Run:
+        prompt_len = reqs[0].prompt_len
+        max_new = max(r.max_new for r in reqs)
+        if self._growable():
+            capacity = align_capacity(prompt_len + 1, self.page)
+        else:
+            capacity = prompt_len + max_new + 1
+        ss = self._steps(len(reqs), prompt_len, capacity)
+        batch = self._stack_features(reqs)
+        logits, cache = ss.prefill(self.params, batch)
+        toks = sample(logits, scfg, step_key(scfg, step))
+        run = _Run(
+            cid=cid, reqs=reqs, steps=ss, cache=cache,
+            next_tokens=toks[:, None],
+            capacity=(cache_capacity(self.cfg, cache)
+                      if self._growable() else None),
+            pos=prompt_len,
+            active={r.rid: i for i, r in enumerate(reqs)})
+        self.metrics["cohorts"] += 1
+        if run.capacity is not None:
+            self.metrics["capacities"].append(run.capacity)
+        self._emit(run, toks, outputs, scfg)
+        return run
+
+    # ----------------------------------------------------------------- decode
+    def _emit(self, run: _Run, toks, outputs: Dict[int, List[int]],
+              scfg: SamplingConfig) -> None:
+        toks = np.asarray(toks).reshape(-1)
+        for r in list(run.reqs):
+            slot = run.active.get(r.rid)
+            if slot is None:
+                continue
+            t = int(toks[slot])
+            outputs[r.rid].append(t)
+            self.metrics["tokens"] += 1
+            if len(outputs[r.rid]) >= r.max_new or \
+                    (scfg.eos_id is not None and t == scfg.eos_id):
+                del run.active[r.rid]
+                self.scheduler.finish(run.cid, r.rid)
+
+    def _compact(self, run: _Run) -> None:
+        """Drop finished slots from the cohort batch: slice the cache (and
+        the pending next-token column) down to the survivors so their
+        pages release immediately instead of at whole-cohort retirement.
+        Called at growth boundaries -- the moment freed pages pay for
+        themselves -- since each new batch shape is another jit bucket."""
+        import jax.numpy as jnp
+
+        if not run.active or len(run.active) == len(run.reqs):
+            return
+        keep = [r for r in run.reqs if r.rid in run.active]
+        idx = [run.active[r.rid] for r in keep]
+        run.cache = take_slots(run.cache, idx)
+        run.next_tokens = jnp.take(run.next_tokens,
+                                   jnp.asarray(idx), axis=0)
+        run.reqs = keep
+        run.active = {r.rid: i for i, r in enumerate(keep)}
+        self.scheduler.shrink_slots(run.cid, [r.rid for r in keep])
+
+    def _ensure_capacity(self, run: _Run, runs: Dict[int, "_Run"],
+                         outputs: Dict[int, List[int]]) -> None:
+        if run.capacity is None or run.pos + 1 <= run.capacity:
+            return
+        # Before asking for more pages, release the ones finished slots
+        # still pin (growth is where a smaller batch pays for the retrace).
+        self._compact(run)
+        needed = run.capacity + self.page.page_tokens
+        while not self.scheduler.reserve(run.cid, needed):
+            victim = self.scheduler.youngest_other(run.cid)
+            if victim is None or victim not in runs:
+                raise RuntimeError(
+                    f"KV budget {self.scheduler.budget_bytes} cannot hold "
+                    f"one growing cohort; raise kv_budget_bytes")
+            # Recompute preemption: requeue the victim's unfinished
+            # requests.  Their emitted tokens regenerate from scratch, so
+            # they come off the delivered-token count too.
+            for r in self.scheduler.evict(victim):
+                self.metrics["tokens"] -= len(outputs[r.rid])
+                outputs[r.rid] = []
+            del runs[victim]
+            self.metrics["evictions"] += 1
+        run.cache = grow_cache(self.cfg, run.cache, needed)
+        run.capacity = needed
+        self.metrics["capacities"].append(needed)
+
+    def _decode_cohort(self, run: _Run, runs: Dict[int, "_Run"],
+                       outputs: Dict[int, List[int]],
+                       scfg: SamplingConfig, step: int) -> None:
+        import jax.numpy as jnp
+
+        self._ensure_capacity(run, runs, outputs)
+        batch = {"tokens": run.next_tokens}
+        if self.cfg.family == "vlm":
+            batch["positions_3d"] = jnp.broadcast_to(
+                run.cache["pos"][None, None, None],
+                (3, len(run.reqs), 1)).astype(jnp.int32)
+        logits, run.cache = run.steps.decode(self.params, run.cache, batch)
+        toks = sample(logits, scfg, step_key(scfg, step))
+        run.next_tokens = toks[:, None].astype(jnp.int32)
+        run.pos += 1
+        self.metrics["decode_steps"] += 1
+        self._emit(run, toks, outputs, scfg)
+
+    # --------------------------------------------------------------- generate
+    def generate(
+        self,
+        prompts: Sequence[Any],
+        max_new_tokens=None,
+        sampling: Optional[SamplingConfig] = None,
+    ) -> List[List[int]]:
+        """Serve ``prompts`` (token-id sequences, or per-family feature
+        dicts without the batch dim), returning each request's generated
+        token ids in submission order.  ``max_new_tokens`` is one int for
+        all requests or a per-request sequence.  Continuous batching: admissions
+        (prefills) interleave with one decode step per live cohort per
+        tick, and the resident KV footprint stays inside the planned
+        budget throughout (asserted every tick).
+        """
+        scfg = sampling or self.policy.sampling
+        max_new = (max_new_tokens if max_new_tokens is not None
+                   else self.policy.max_new_tokens)
+        if isinstance(max_new, int):
+            max_new = [max_new] * len(prompts)
+        if len(max_new) != len(prompts):
+            raise ValueError(
+                f"max_new_tokens: expected one int or {len(prompts)} "
+                f"entries, got {len(max_new)}")
+        reqs = [self._make_request(p, n) for p, n in zip(prompts, max_new)]
+        for r in reqs:
+            self.scheduler.submit(r)
+        outputs: Dict[int, List[int]] = {r.rid: [] for r in reqs}
+        runs: Dict[int, _Run] = {}
+        step = 0
+        while self.scheduler.has_work():
+            progressed = False
+            for cid, batch in self.scheduler.admit():
+                runs[cid] = self._prefill_cohort(cid, batch, outputs,
+                                                 scfg, step)
+                step += 1
+                progressed = True
+            for cid in sorted(runs):
+                run = runs.get(cid)
+                if run is None:
+                    continue            # evicted by a sibling's growth
+                if not run.active:
+                    del runs[cid]
+                    continue
+                self._decode_cohort(run, runs, outputs, scfg, step)
+                step += 1
+                progressed = True
+                if not run.active:
+                    del runs[cid]
+            assert self.scheduler.allocated_bytes <= \
+                self.scheduler.budget_bytes, "resident KV exceeded the plan"
+            if not progressed:
+                raise RuntimeError("scheduler stalled with pending work")
+        self.metrics["peak_resident_bytes"] = self.scheduler.peak_bytes
+        return [outputs[r.rid] for r in reqs]

@@ -1,0 +1,58 @@
+"""Sampling API for the serving engine: greedy / temperature / top-k,
+seeded and deterministic for a fixed run.
+
+``sample`` consumes the last-token logits of a decode (or prefill) step,
+``(B, V)``, and returns ``(B,)`` int32 token ids.  Greedy is exact argmax
+(the mode the token-identity tests pin against the legacy loop);
+temperature and top-k draw from ``jax.random.categorical`` under a key the
+engine derives from ``SamplingConfig.seed`` and the global step counter,
+so a run replays bit-identically under the same seed and schedule.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+KINDS = ("greedy", "temperature", "top_k")
+
+
+@dataclass(frozen=True)
+class SamplingConfig:
+    kind: str = "greedy"
+    temperature: float = 1.0
+    top_k: int = 0                 # used by kind="top_k"
+    seed: int = 0
+    eos_id: Optional[int] = None   # stop decoding a slot on this token
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown sampling kind {self.kind!r}; "
+                             f"one of {KINDS}")
+        if self.kind == "top_k" and self.top_k <= 0:
+            raise ValueError("kind='top_k' needs top_k >= 1")
+
+
+def sample(logits: jax.Array, cfg: SamplingConfig,
+           key: Optional[jax.Array] = None) -> jax.Array:
+    """Draw one token per row of ``logits`` (B, V) -> (B,) int32."""
+    if cfg.kind == "greedy":
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if key is None:
+        raise ValueError(f"sampling kind {cfg.kind!r} needs a PRNG key")
+    scaled = logits.astype(jnp.float32) / max(1e-6, cfg.temperature)
+    if cfg.kind == "top_k":
+        k = min(cfg.top_k, scaled.shape[-1])
+        kth = jnp.sort(scaled, axis=-1)[..., -k][..., None]
+        scaled = jnp.where(scaled >= kth, scaled, -jnp.inf)
+    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+
+
+def step_key(cfg: SamplingConfig, step: int) -> Optional[jax.Array]:
+    """The engine's per-step key (None for greedy: no randomness)."""
+    if cfg.kind == "greedy":
+        return None
+    return jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)

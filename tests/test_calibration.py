@@ -1,0 +1,69 @@
+"""Calibration artifact satellite: ``launch/dryrun.py --calibrate`` writes
+``experiments/calibration.json`` and ``ModelConfig.overhead`` defaults
+from it when the registered config leaves overhead at 1.0 (explicit
+per-arch overheads always win)."""
+
+import json
+
+import pytest
+
+from repro.configs.base import CALIBRATION_ENV
+
+
+@pytest.fixture
+def cal_env(tmp_path, monkeypatch):
+    path = tmp_path / "calibration.json"
+    monkeypatch.setenv(CALIBRATION_ENV, str(path))
+    yield path
+
+
+def test_write_calibration_folds_worst_cell(cal_env):
+    from repro.launch.dryrun import write_calibration
+
+    records = [
+        {"arch": "llama3.2-1b", "shape": "train_4k", "mesh": "16x16",
+         "calibration_ratio": 0.8, "overhead": 1.0},
+        {"arch": "llama3.2-1b", "shape": "decode_32k", "mesh": "16x16",
+         "calibration_ratio": 0.5, "overhead": 1.0},
+    ]
+    write_calibration(records, path=str(cal_env))
+    data = json.loads(cal_env.read_text())
+    assert data["llama3.2-1b"]["overhead"] == pytest.approx(2.0)
+    assert data["llama3.2-1b"]["worst_cell"] == "decode_32k@16x16"
+    # Partial re-runs merge: a second arch joins, the first survives.
+    write_calibration(
+        [{"arch": "qwen2-0.5b", "shape": "train_4k", "mesh": "16x16",
+          "calibration_ratio": 0.9, "overhead": 1.0}], path=str(cal_env))
+    data = json.loads(cal_env.read_text())
+    assert set(data) >= {"llama3.2-1b", "qwen2-0.5b"}
+
+
+def test_model_config_defaults_overhead_from_artifact(cal_env):
+    from repro.configs import get_model_config
+
+    cal_env.write_text(json.dumps({
+        "llama3.2-1b": {"overhead": 1.7},
+        "mixtral-8x7b": {"overhead": 3.0},
+    }))
+    # Default-overhead arch picks the measured value up...
+    assert get_model_config("llama3.2-1b").overhead == 1.7
+    # ...an explicitly calibrated registration does not.
+    assert get_model_config("mixtral-8x7b").overhead == 1.25
+
+
+def test_missing_or_broken_artifact_is_harmless(cal_env):
+    from repro.configs import get_model_config
+
+    assert get_model_config("llama3.2-1b").overhead == 1.0
+    cal_env.write_text("{not json")
+    assert get_model_config("llama3.2-1b").overhead == 1.0
+
+
+def test_artifact_rewrite_is_picked_up_in_process(cal_env):
+    """The stat-keyed cache must see a rewrite (e.g. ``dryrun --calibrate``
+    running in the same process) without manual invalidation."""
+    from repro.configs import get_model_config
+
+    assert get_model_config("llama3.2-1b").overhead == 1.0
+    cal_env.write_text(json.dumps({"llama3.2-1b": {"overhead": 1.5}}))
+    assert get_model_config("llama3.2-1b").overhead == 1.5

@@ -1,0 +1,113 @@
+"""Scheduler property tests (ISSUE 4 satellite): the resident KV bytes
+never exceed the planned budget under random admit / grow / finish /
+evict sequences, and the page accounting always reconciles with a
+from-scratch recomputation.  Pure python -- no jax."""
+
+import random
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serve.kvcache import PageSpec
+from repro.serve.scheduler import Request, ServeScheduler
+
+
+def _recompute_allocated(sched: ServeScheduler) -> int:
+    total = 0
+    for c in sched._cohorts.values():
+        per_slot = c.pages_per_slot * sched.page.page_bytes
+        total += sum(per_slot + r.state_bytes for r in c.reqs)
+    return total
+
+
+def _check(sched: ServeScheduler) -> None:
+    assert sched.allocated_bytes <= sched.budget_bytes, \
+        "resident KV exceeded the planned budget"
+    assert sched.allocated_bytes == _recompute_allocated(sched)
+    assert sched.peak_bytes <= sched.budget_bytes
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       page_tokens=st.sampled_from([8, 16, 64]),
+       budget_pages=st.integers(min_value=4, max_value=64))
+def test_resident_kv_never_exceeds_budget(seed, page_tokens, budget_pages):
+    rng = random.Random(seed)
+    page = PageSpec(page_tokens=page_tokens, token_bytes=32)
+    budget = budget_pages * page.page_bytes
+    sched = ServeScheduler(budget, page, max_slots=rng.choice([1, 2, 4]))
+    rid = 0
+    for _ in range(rng.randint(10, 60)):
+        op = rng.random()
+        running = sched.running()
+        if op < 0.35:
+            sched.submit(Request(
+                rid=rid,
+                prompt_len=rng.randint(1, page_tokens * 2),
+                max_new=rng.randint(1, 8),
+                state_bytes=rng.choice([0, 64, 1024])))
+            rid += 1
+        elif op < 0.60:
+            try:
+                sched.admit()
+            except ValueError:
+                # A lone oversized head request: legitimately refused.
+                sched.pending.popleft()
+        elif op < 0.80 and running:
+            cid = rng.choice(running)
+            cap = sched.capacity_tokens(cid) + page_tokens
+            sched.reserve(cid, cap)     # may refuse; never overflows
+        elif op < 0.92 and running:
+            cid = rng.choice(running)
+            c = sched._cohorts[cid]
+            todo = [r.rid for r in c.reqs if r.rid not in c.done]
+            if todo:
+                sched.finish(cid, rng.choice(todo))
+        elif running:
+            sched.evict(rng.choice(running))
+        _check(sched)
+    # Drain: finishing everything releases every page.
+    for cid in list(sched.running()):
+        c = sched._cohorts[cid]
+        for r in list(c.reqs):
+            if r.rid not in c.done:
+                sched.finish(cid, r.rid)
+        _check(sched)
+    assert sched.allocated_bytes == 0
+
+
+def test_admission_is_fifo_and_groups_by_prompt_shape():
+    page = PageSpec(page_tokens=8, token_bytes=1)
+    sched = ServeScheduler(10_000, page, max_slots=4)
+    for rid, plen in enumerate([8, 8, 16, 8]):
+        sched.submit(Request(rid=rid, prompt_len=plen, max_new=2))
+    admitted = sched.admit()
+    # Head group (len 8) first -- including the queued rid=3 -- then len 16.
+    assert [sorted(r.rid for r in batch) for _, batch in admitted] == \
+        [[0, 1, 3], [2]]
+
+
+def test_eviction_requeues_unfinished_at_front():
+    page = PageSpec(page_tokens=8, token_bytes=1)
+    sched = ServeScheduler(10_000, page, max_slots=2)
+    for rid in range(3):
+        sched.submit(Request(rid=rid, prompt_len=8, max_new=2))
+    (cid, batch), (cid2, _) = sched.admit()
+    sched.finish(cid, batch[0].rid)
+    revived = sched.evict(cid)
+    assert [r.rid for r in revived] == [batch[1].rid]
+    assert sched.pending[0].rid == batch[1].rid
+    assert sched.allocated_bytes == _recompute_allocated(sched)
+
+
+def test_oversized_request_is_rejected_not_starved():
+    page = PageSpec(page_tokens=8, token_bytes=100)
+    sched = ServeScheduler(BUDGET := 1_000, page)
+    sched.submit(Request(rid=0, prompt_len=1_000, max_new=1))
+    try:
+        sched.admit()
+    except ValueError as e:
+        assert "budget" in str(e)
+    else:
+        raise AssertionError("oversized request was admitted")
+    assert sched.allocated_bytes == 0 and BUDGET == sched.budget_bytes
