@@ -17,6 +17,10 @@ Prints ``name,us_per_call,derived`` CSV lines.
              planned-vs-naive KV page sizes; with --dry, the decode plan
              tree + the DCN-free / VMEM-fit assertions CI greps
              (DESIGN.md §7)
+  paged    -- tok/s + slot-utilization A/B of the paged page-pool engine
+             vs the cohort baseline on a mixed-length trace; with --dry,
+             the pool-geometry-matches-page_plan assertion CI greps
+             (DESIGN.md §8)
 
 Usage: ``python -m benchmarks.run [--quick] [--only table3,roofline]
                                   [--collectives gspmd|ring|serpentine]``
@@ -342,6 +346,95 @@ def serve_dry() -> list:
     return out
 
 
+def paged_dry() -> list:
+    """--only paged --dry: pool geometry end to end, no model math.
+
+    Builds a paged engine on the host mesh and asserts its pool geometry
+    is taken VERBATIM from ``plan_run``'s page level: the pool's page size
+    equals ``page_plan()["page_tokens"]``, the per-slot table width covers
+    the plan's ``page_table()["pages_per_slot"]`` bound, and the physical
+    pool never exceeds the plan's ``pages_total`` budget bound (the engine
+    applies ``kv_fraction < 1`` on top).  CI greps
+    ``pool_matches_plan=True`` (``ci/run_tests.sh``).
+    """
+    import numpy as np
+    from repro.configs import get_model_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve import ServeEngine, ServePolicy
+
+    cfg = get_model_config("llama3.2-1b").reduced()
+    engine = ServeEngine(
+        cfg, make_host_mesh(),
+        policy=ServePolicy(max_new_tokens=4, max_slots=2, max_len=64,
+                           batching="paged"))
+    rng = np.random.default_rng(0)
+    engine.generate([rng.integers(0, 256, 9, dtype=np.int32)])
+    m = engine.metrics
+    page = engine.plan.page_plan()
+    ptab = engine.plan.page_table() or {}
+    pool_ok = (
+        m["batching"] == "paged"
+        and page is not None
+        and m["page_tokens"] == page["page_tokens"]
+        and m["pages_per_slot"] >= int(ptab.get("pages_per_slot", 1))
+        and (not ptab.get("pages_total")
+             or m["pages_total"] <= ptab["pages_total"])
+        and m["pages_total"] >= 1
+        and m["pages_allocated"] == m["pages_released"]  # drained pool
+    )
+    return [
+        f"paged_dry_geometry,0,page_tokens={m['page_tokens']};"
+        f"pages_total={m['pages_total']};pages_per_slot={m['pages_per_slot']};"
+        f"plan_pages_per_slot={ptab.get('pages_per_slot')};"
+        f"plan_pages_total={ptab.get('pages_total')};"
+        f"pool_matches_plan={pool_ok}",
+    ]
+
+
+def paged_bench(quick: bool) -> list:
+    """--only paged: tok/s + slot-utilization of the paged engine vs the
+    PR 4 cohort engine on a mixed-length trace (mixed prompt lengths AND
+    mixed max_new, so cohorts drag finished slots while the page pool
+    backfills them)."""
+    import numpy as np
+    from repro.configs import get_model_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve import ServeEngine, ServePolicy
+
+    cfg = get_model_config("llama3.2-1b").reduced()
+    rng = np.random.default_rng(0)
+    lens = (16, 16, 32, 16, 32, 16) if not quick else (16, 16, 32)
+    news = (24, 6, 24, 6, 24, 6) if not quick else (12, 3, 12)
+    prompts = [rng.integers(0, cfg.vocab_size, n, dtype=np.int32)
+               for n in lens]
+    out = []
+    results = {}
+    for mode in ("cohort", "paged"):
+        engine = ServeEngine(
+            cfg, make_host_mesh(),
+            policy=ServePolicy(max_slots=2, max_len=128, batching=mode))
+        t0 = time.perf_counter()
+        outs = engine.generate(prompts, max_new_tokens=list(news))
+        dt = time.perf_counter() - t0
+        n_tok = sum(len(o) for o in outs)
+        m = engine.metrics
+        results[mode] = (outs, m)
+        out.append(
+            f"paged_ab_{mode},{dt / max(1, n_tok) * 1e6:.0f},"
+            f"tok_s={n_tok / max(dt, 1e-9):.1f};tokens={n_tok};"
+            f"slot_utilization={m['slot_utilization']:.3f};"
+            f"backfills={m.get('backfills', 0)};"
+            f"decode_steps={m['decode_steps']}")
+    same = results["cohort"][0] == results["paged"][0]
+    cu = results["cohort"][1]["slot_utilization"]
+    pu = results["paged"][1]["slot_utilization"]
+    out.append(
+        f"paged_ab_summary,0,token_identical={same};"
+        f"util_cohort={cu:.3f};util_paged={pu:.3f};"
+        f"paged_util_higher={pu > cu}")
+    return out
+
+
 def serve_bench(quick: bool) -> list:
     """--only serve: tok/s of the plan-driven engine on this host, next to
     the planned-vs-naive page sizes (naive = the legacy loop's allocation
@@ -393,6 +486,7 @@ SECTIONS = {
     "plan": plan_tree,
     "collectives": collectives_bench,
     "serve": serve_bench,
+    "paged": paged_bench,
 }
 
 
@@ -453,10 +547,15 @@ def main() -> None:
         # CI gate: unlike the benchmark sections below, failures here must
         # propagate to a nonzero exit, not become an _ERROR CSV row.
         print("name,us_per_call,derived")
-        if args.only.strip() == "serve":
-            # The serve smoke: decode plan tree + page/DCN assertions only.
-            for line in serve_dry():
-                print(line)
+        # Dedicated dry smokes (serve: decode plan tree + page/DCN
+        # assertions; paged: pool geometry vs the plan's page level) --
+        # any --only list made up entirely of these runs them in order.
+        dry_sections = {"serve": serve_dry, "paged": paged_dry}
+        only = [s.strip() for s in args.only.split(",") if s.strip()]
+        if only and all(s in dry_sections for s in only):
+            for s in only:
+                for line in dry_sections[s]():
+                    print(line)
             return
         for line in dry(args.quick, args.collectives):
             print(line)

@@ -51,4 +51,13 @@ printf '%s\n' "$serve_out" | grep -q 'dcn_free=True' \
 printf '%s\n' "$serve_out" | grep -q 'page_fits_vmem=True' \
     || { echo "FAIL: serve plan page does not fit VMEM"; exit 1; }
 
+echo "== smoke: paged KV pool (geometry vs page_plan) =="
+# The paged engine end to end on every run: the pool's page size, table
+# width and physical page count must come verbatim from plan_run's page
+# level (DESIGN.md §8), and the drained pool must reconcile.
+paged_out="$(python -m benchmarks.run --only paged --dry)"
+printf '%s\n' "$paged_out"
+printf '%s\n' "$paged_out" | grep -q 'pool_matches_plan=True' \
+    || { echo "FAIL: paged pool geometry does not match page_plan"; exit 1; }
+
 echo "CI OK"

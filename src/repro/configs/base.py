@@ -328,15 +328,23 @@ def calibration_path() -> str:
     return os.path.join(root, "experiments", "calibration.json")
 
 
-#: path -> ((mtime_ns, size) | None, parsed mapping).  Keyed on the stat
+#: path -> ((mtime_ns, size) | None, parsed entries).  Keyed on the stat
 #: signature so a rewrite (e.g. ``dryrun --calibrate`` mid-process) is
 #: picked up without any manual cache invalidation.
-_CAL_CACHE: Dict[str, Tuple[Optional[Tuple[int, int]], Dict[str, float]]] = {}
+_CAL_CACHE: Dict[str, Tuple[Optional[Tuple[int, int]],
+                            Dict[str, Dict[str, float]]]] = {}
+
+#: Calibrated per-arch scalars the artifact may carry: ``overhead`` feeds
+#: ``ModelConfig.overhead`` (the phi_mesh transient factor), ``act_scale``
+#: feeds ``launch.specs.activation_footprint`` (the replicated activation
+#: term the mesh search reserves per chip).
+_CAL_FIELDS = ("overhead", "act_scale")
 
 
-def _load_calibration(path: str) -> Dict[str, float]:
-    """``{arch: overhead}`` from a calibration artifact (empty on any
-    read/parse problem -- calibration is advisory, never a hard dep)."""
+def _load_calibration(path: str) -> Dict[str, Dict[str, float]]:
+    """``{arch: {"overhead": x, "act_scale": y}}`` from a calibration
+    artifact (missing fields omitted; empty on any read/parse problem --
+    calibration is advisory, never a hard dep)."""
     try:
         st = os.stat(path)
         sig: Optional[Tuple[int, int]] = (st.st_mtime_ns, st.st_size)
@@ -345,7 +353,7 @@ def _load_calibration(path: str) -> Dict[str, float]:
     cached = _CAL_CACHE.get(path)
     if cached is not None and cached[0] == sig:
         return cached[1]
-    out: Dict[str, float] = {}
+    out: Dict[str, Dict[str, float]] = {}
     if sig is not None:
         try:
             with open(path) as f:
@@ -353,19 +361,32 @@ def _load_calibration(path: str) -> Dict[str, float]:
         except (OSError, ValueError):
             data = {}
         for arch, entry in data.items():
-            if arch.startswith("_"):
+            if arch.startswith("_") or not isinstance(entry, dict):
                 continue
-            try:
-                out[arch] = float(entry["overhead"])
-            except (KeyError, TypeError, ValueError):
-                continue
+            fields = {}
+            for f_ in _CAL_FIELDS:
+                try:
+                    fields[f_] = float(entry[f_])
+                except (KeyError, TypeError, ValueError):
+                    continue
+            if fields:
+                out[arch] = fields
     _CAL_CACHE[path] = (sig, out)
     return out
 
 
 def calibration_overhead(arch_id: str) -> Optional[float]:
     """The measured ``phi_mesh`` overhead for one arch, or None."""
-    return _load_calibration(calibration_path()).get(arch_id)
+    return _load_calibration(calibration_path()).get(arch_id, {}) \
+        .get("overhead")
+
+
+def calibration_act_scale(arch_id: str) -> Optional[float]:
+    """The measured activation-footprint scale for one arch, or None
+    (``launch/dryrun.py --calibrate`` fits the replicated term the same
+    way it fits ``overhead``)."""
+    return _load_calibration(calibration_path()).get(arch_id, {}) \
+        .get("act_scale")
 
 
 # ---------------------------------------------------------------------------

@@ -250,6 +250,20 @@ class HierarchicalPlan:
                 return lp.detail["page"]
         return None
 
+    def page_table(self) -> Optional[Mapping[str, Any]]:
+        """The page level's pool geometry (None if no page level):
+        ``{"pages_per_slot", "pages_total", "slots_bound"}`` -- the bounds
+        the paged engine's ``PagePool`` must respect.  ``pages_per_slot``
+        caps one sequence (``ceil(max_tokens / page_tokens)``);
+        ``pages_total`` is how many *logical* pages (global token-bytes)
+        the innermost mesh level's HBM leftover can hold after the
+        replicated reserve, accounting for KV replication over the
+        unsharded part of the model axis (0 = no mesh level to bound it)."""
+        for lp in self.levels():
+            if lp.kind == "page":
+                return lp.detail.get("page_table")
+        return None
+
     def kv_shard(self) -> int:
         """The KV head sharding degree the innermost mesh level chose for a
         decode workload (1 when no mesh level carries one)."""
@@ -515,7 +529,8 @@ def _plan_tile_level(level: MemoryLevel, workload: Workload,
 
 def _plan_page_level(level: MemoryLevel, workload: Workload,
                      policy: PlanPolicy, n_workers: int,
-                     kv_shard: int = 1) -> LevelPlan:
+                     kv_shard: int = 1,
+                     mesh_budget_bytes: int = 0) -> LevelPlan:
     """The decode KV page search (``repro.serve``): Algorithm 1 over one
     sequence's resident token range.
 
@@ -558,6 +573,16 @@ def _plan_page_level(level: MemoryLevel, workload: Workload,
     page_tokens = -(-per_partition // PAGE_ALIGN) * PAGE_ALIGN
     page_bytes = page_tokens * tok_bytes
     n_pages = -(-tokens // page_tokens)
+    # Pool geometry (the paged engine's bounds, DESIGN.md §8): one logical
+    # page costs ``page_tokens x kv_bytes_per_token`` GLOBAL bytes; the
+    # innermost mesh level's per-chip HBM leftover after the replicated
+    # reserve holds ``free x kv_shard`` logical bytes per data shard (one
+    # logical byte is stored once per model-axis replica group, i.e.
+    # ``extent / kv_shard`` copies across the ``extent``-chip domain).
+    global_page_bytes = page_tokens * max(1, workload.kv_bytes_per_token)
+    per_chip_free = max(0, mesh_budget_bytes - workload.replicated_bytes)
+    pages_total = (per_chip_free * max(1, kv_shard)) // global_page_bytes \
+        if mesh_budget_bytes else 0
     return LevelPlan(
         level=level.name, kind="page", phi="phi_page",
         budget_bytes=budget, granule_bytes=granule,
@@ -573,6 +598,10 @@ def _plan_page_level(level: MemoryLevel, workload: Workload,
             "kv_shard": max(1, kv_shard),
             "align": PAGE_ALIGN,
             "buffering": PAGE_BUFFERING,
+        }, "page_table": {
+            "pages_per_slot": n_pages,
+            "pages_total": int(pages_total),
+            "slots_bound": int(pages_total // n_pages) if pages_total else 0,
         }},
     )
 
@@ -629,6 +658,7 @@ def plan_run(hierarchy: MemoryLevel, workload: Workload,
     nodes: List[LevelPlan] = []
     np_thread = max(1, policy.n_workers)
     kv_shard = 1
+    mesh_budget = 0
     level: Optional[MemoryLevel] = hierarchy
     while level is not None:
         kind = _classify(level, workload, policy)
@@ -638,6 +668,7 @@ def plan_run(hierarchy: MemoryLevel, workload: Workload,
             np_thread = node.np
             if "kv_shard" in node.detail:
                 kv_shard = int(node.detail["kv_shard"])
+            mesh_budget = node.budget_bytes      # innermost mesh level wins
             nxt = level.child
             if nxt is not None and nxt.name not in MESH_LEVEL_NAMES:
                 copies = max(1, len(nxt.siblings))   # the consumed TCL level
@@ -651,7 +682,7 @@ def plan_run(hierarchy: MemoryLevel, workload: Workload,
             np_thread = node.np
         elif kind == "page":
             node = _plan_page_level(level, workload, policy, np_thread,
-                                    kv_shard)
+                                    kv_shard, mesh_budget_bytes=mesh_budget)
             nodes.append(node)
             np_thread = node.np_raw
         elif kind == "cache":

@@ -420,10 +420,18 @@ def with_kv_sharding(rules: ShardingRules, kv_shard: int,
     realizes exactly that choice: heads sharded over ``axis`` when
     ``kv_shard > 1``, fully replicated KV otherwise -- and never the
     legacy auto-policy's sequence fallback, which the plan does not model.
+
+    The same choice covers the POOLED layout (``repro.serve.pages``): the
+    page pool's head dim carries the same "kv_heads" logical axis, and its
+    page dim ("kv_pages") is pinned unsharded -- a page is the VMEM
+    streaming granule of one chip, so splitting a page across chips would
+    break the plan's block-size = page-size identity.  The per-slot page
+    table and position vector replicate (scalar bookkeeping).
     """
     ar = dict(rules.act_rules)
     ar["kv_heads"] = axis if kv_shard > 1 else None
     ar["kv_seq"] = None
+    ar["kv_pages"] = None
     meta = dict(rules.meta)
     meta["kv_shard"] = int(kv_shard)
     return ShardingRules(dict(rules.param_rules), ar, meta=meta)

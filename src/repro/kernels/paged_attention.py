@@ -1,0 +1,167 @@
+"""Paged decode attention: gather K/V through a page table, one planned
+page per grid step.
+
+The serving engine's KV pool (``repro.serve.pages``) stores every slot's
+KV stream as whole *pages* -- the VMEM-sized token runs Algorithm 1 fits
+at the plan's page level -- scattered across a shared physical pool.  This
+kernel is the read side: for each slot it walks the slot's page table and
+streams the pages through VMEM with a running (max, sum, acc) softmax, so
+the working set per grid step is exactly ``PAGE_BUFFERING`` pages -- the
+kernel's block size along the KV sequence IS ``page_plan()["page_tokens"]``
+(asserted), which is what makes the pool's allocation granule and the
+kernel's streaming granule the same object.
+
+Grid: ``(slots, n_logical_pages)`` with pages innermost.  The page table
+and per-slot lengths ride as scalar-prefetch operands
+(``pltpu.PrefetchScalarGridSpec``) so the index map can resolve
+``table[slot, page]`` before the DMA is issued -- unallocated logical
+pages point at physical page 0 (the pool's reserved null page) and are
+masked off by the per-row length, exactly like padded keys in the flash
+kernel.  Masks are per row: causal (``kpos <= len-1``), sliding window
+(``kpos > len-1-window``), and emptiness (``len == 0`` rows produce a
+fully-masked, all-zero output the engine ignores).
+
+Runs in interpret mode on CPU (the default off-TPU), which is how the
+paged-vs-cohort token-identity tests drive it.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _pa_kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+               m_ref, l_ref, acc_ref, *, page_tokens: int, n_kv: int,
+               n_pages: int, window: int, scale: float):
+    s = pl.program_id(0)
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qpos = len_ref[s] - 1                           # -1 on empty slots
+
+    # Pages wholly past the row's live length are a no-op under the
+    # running softmax (all-masked block: corr = 1, l/acc unchanged), so
+    # skip their dot products entirely -- the table width covers the
+    # plan's max_tokens bound, but per-token cost must track the LIVE
+    # footprint (their DMAs all resolve to the cached null page 0).
+    @pl.when(p * page_tokens <= qpos)
+    def _accumulate():
+        q = q_ref[0]                               # (H, D)
+        k = k_ref[0]                               # (T, KV, D)
+        v = v_ref[0]
+        h, d = q.shape
+        g = h // n_kv
+
+        # Grouped GQA contraction: query heads grouped per KV head (the
+        # same (kv, g) layout as layers.grouped_attention), never
+        # head-repeated.
+        qg = q.reshape(n_kv, g, d)
+        logits = jax.lax.dot_general(
+            qg, k, (((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32)     # (KV, G, T)
+        logits = logits.reshape(h, page_tokens) * scale
+
+        kpos = p * page_tokens + jax.lax.broadcasted_iota(
+            jnp.int32, (h, page_tokens), 1)
+        mask = kpos <= qpos                         # causal + length + empty
+        if window:
+            mask &= kpos > qpos - window
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_cur = jnp.max(logits, axis=-1)[:, None]   # (H, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        pr = jnp.exp(logits - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(pr, axis=-1)[:, None]
+        pv = jax.lax.dot_general(
+            pr.reshape(n_kv, g, page_tokens).astype(v.dtype), v,
+            (((2,), (0,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32)      # (KV, G, D)
+        acc_ref[...] = acc_ref[...] * corr + pv.reshape(h, d)
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(p == n_pages - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_attention(
+    q: jax.Array,            # (S, H, D)  one query token per slot
+    k_pages: jax.Array,      # (P, T, KV, D)  one layer's page pool
+    v_pages: jax.Array,      # (P, T, KV, D)
+    page_table: jax.Array,   # (S, NP) int32
+    lengths: jax.Array,      # (S,) int32   valid tokens incl. current
+    window: int = 0,
+    page_tokens: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """One decode step of attention against the paged KV pool.
+
+    ``page_tokens`` is the plan's page size; when given it is asserted
+    against the pool's second dim -- the kernel refuses to stream at any
+    granule other than the planned page (the whole point of the plan).
+    Returns ``(S, H, D)``.
+    """
+    s, h, d = q.shape
+    p_total, t, n_kv, _ = k_pages.shape
+    if page_tokens is not None and t != page_tokens:
+        raise ValueError(
+            f"pool page_tokens={t} != planned page_tokens={page_tokens}; "
+            f"the kernel block must be the planned page")
+    if h % n_kv != 0:
+        raise ValueError(f"{h} query heads do not group over {n_kv} KV heads")
+    n_pages = page_table.shape[1]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    scale = 1.0 / math.sqrt(d)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                       # page_table, lengths
+        grid=(s, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda si, pi, tbl, ln: (si, 0, 0)),
+            pl.BlockSpec((1, t, n_kv, d),
+                         lambda si, pi, tbl, ln: (tbl[si, pi], 0, 0, 0)),
+            pl.BlockSpec((1, t, n_kv, d),
+                         lambda si, pi, tbl, ln: (tbl[si, pi], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda si, pi, tbl, ln: (si, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),         # running max
+            pltpu.VMEM((h, 1), jnp.float32),         # running sum
+            pltpu.VMEM((h, d), jnp.float32),         # output accumulator
+        ],
+    )
+    # jax 0.4.x names it TPUCompilerParams; newer releases CompilerParams.
+    params_cls = getattr(pltpu, "CompilerParams", None) or \
+        pltpu.TPUCompilerParams
+    return pl.pallas_call(
+        functools.partial(
+            _pa_kernel, page_tokens=t, n_kv=n_kv, n_pages=n_pages,
+            window=window, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s, h, d), q.dtype),
+        compiler_params=params_cls(
+            dimension_semantics=("parallel", "arbitrary"),
+        ) if not interpret else None,
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pages, v_pages)

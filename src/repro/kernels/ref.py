@@ -29,6 +29,37 @@ def flash_attention_ref(
     return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v)
 
 
+def paged_attention_ref(
+    q: jax.Array,            # (S, H, D)  one query token per slot
+    k_pages: jax.Array,      # (P, T, KV, D)  page pool, one layer
+    v_pages: jax.Array,      # (P, T, KV, D)
+    page_table: jax.Array,   # (S, NP) int32  physical page per logical page
+    lengths: jax.Array,      # (S,) int32  valid tokens incl. the current one
+    window: int = 0,
+) -> jax.Array:
+    """Paged decode attention, defined by gather: materialize each slot's
+    logical KV stream through its page table, then grouped GQA attention
+    with per-row causal/window/length masks.  ``lengths[s] == 0`` marks an
+    empty slot (output row undefined -- the engine ignores it)."""
+    s, h, d = q.shape
+    kv = k_pages.shape[2]
+    g = h // kv
+    k = k_pages[page_table].reshape(s, -1, kv, d)     # (S, NP*T, KV, D)
+    v = v_pages[page_table].reshape(s, -1, kv, d)
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(s, kv, g, d)
+    logits = jnp.einsum("skgd,stkd->skgt", qg, k).astype(jnp.float32) * scale
+    kpos = jnp.arange(k.shape[1])[None, :]            # (1, NP*T)
+    qpos = lengths[:, None].astype(jnp.int32) - 1     # (S, 1)
+    mask = kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("skgt,stkd->skgd", probs, v)
+    return out.reshape(s, h, d)
+
+
 def ssd_ref(
     x: jax.Array,        # (B, S, H, P)
     dt: jax.Array,       # (B, S, H)

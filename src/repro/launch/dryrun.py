@@ -227,7 +227,8 @@ def calibrate_cell(arch: str, shape_name: str, multi_pod: bool = False,
         length=max(1, lp.detail["sharded_bytes"]), element_size=1)]
     if lp.detail["replicated_bytes"]:
         dists.append(ReplicatedDistribution(lp.detail["replicated_bytes"]))
-    est = sum(phi(lp.granule_bytes, d, realized) for d in dists)
+    terms = [phi(lp.granule_bytes, d, realized) for d in dists]
+    est = sum(terms)
     mem = rep["memory"]
     # XLA's CPU backend reports no peak; fall back to the resident total
     # (arguments + temporaries + outputs), which is what phi_mesh models.
@@ -239,10 +240,32 @@ def calibrate_cell(arch: str, shape_name: str, multi_pod: bool = False,
           f"phi_mesh_est={est / 2 ** 30:.2f}GiB "
           f"hlo_peak={peak / 2 ** 30:.2f}GiB "
           f"calibration_ratio={ratio:.2f} (overhead={cfg.overhead})")
-    return {"arch": arch, "shape": shape_name,
-            "mesh": "2x16x16" if multi_pod else "16x16",
-            "phi_mesh_est_bytes": est, "hlo_peak_bytes": peak,
-            "calibration_ratio": ratio, "overhead": cfg.overhead}
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "phi_mesh_est_bytes": est, "hlo_peak_bytes": peak,
+           "calibration_ratio": ratio, "overhead": cfg.overhead}
+    # Fit the REPLICATED term too (ROADMAP: calibrate activation_footprint
+    # the same way as overhead).  Train cells feed activation_footprint in
+    # as the replicated reserve, so the activation-implied residual is the
+    # HLO peak minus the sharded-state estimate, and the ratio of modeled
+    # to implied activation bytes calibrates ``act_scale``.  Serve cells
+    # skip it: their replicated term is dominated by the weight shard.
+    if shape.kind == "train" and len(terms) > 1 and peak:
+        from repro.configs.base import calibration_act_scale
+
+        act_est = terms[1]
+        act_residual = max(1.0, peak - terms[0])
+        rec.update({
+            "act_est_bytes": act_est,
+            "act_residual_bytes": act_residual,
+            "act_ratio": act_est / act_residual,
+            "act_scale": calibration_act_scale(arch) or 1.0,
+        })
+        print(f"[cal]   act: modeled={act_est / 2 ** 30:.2f}GiB "
+              f"implied={act_residual / 2 ** 30:.2f}GiB "
+              f"act_ratio={rec['act_ratio']:.2f} "
+              f"(act_scale={rec['act_scale']})")
+    return rec
 
 
 def write_calibration(records: list, path: str = None) -> str:
@@ -274,17 +297,43 @@ def write_calibration(records: list, path: str = None) -> str:
             continue
         worst = min(finite, key=lambda r: r["calibration_ratio"])
         suggested = max(1.0, worst["overhead"] / worst["calibration_ratio"])
-        existing[arch] = {
+        entry = {
             "overhead": round(suggested, 3),
             "worst_ratio": round(worst["calibration_ratio"], 4),
             "worst_cell": f"{worst['shape']}@{worst['mesh']}",
             "cells": len(recs),
         }
+        # The replicated (activation) term, fitted the same way: the scale
+        # that makes the modeled activation bytes meet the worst observed
+        # activation-implied residual, clamped at 1.0 (the model never
+        # undershoots on purpose).  ``est = act_scale * base``, so the
+        # meeting scale is ``act_scale / act_ratio``.
+        acts = [r for r in recs
+                if r.get("act_ratio") not in (None, 0, float("inf"))]
+        if acts:
+            worst_a = min(acts, key=lambda r: r["act_ratio"])
+            entry["act_scale"] = round(
+                max(1.0, worst_a["act_scale"] / worst_a["act_ratio"]), 3)
+            entry["act_worst_ratio"] = round(worst_a["act_ratio"], 4)
+            entry["act_worst_cell"] = \
+                f"{worst_a['shape']}@{worst_a['mesh']}"
+        else:
+            # A run with no train cells (e.g. --shape decode_32k) fits no
+            # activation term; carry the previously calibrated act fields
+            # forward instead of silently reverting act_scale to 1.0.
+            prev = existing.get(arch, {})
+            for k in ("act_scale", "act_worst_ratio", "act_worst_cell"):
+                if isinstance(prev, dict) and k in prev:
+                    entry[k] = prev[k]
+        existing[arch] = entry
     existing["_meta"] = {
         "source": "launch/dryrun.py --calibrate",
         "note": "overhead = registered_overhead / min(phi_mesh_est / "
-                "hlo_peak); consumed by configs.base.get_model_config "
-                "for archs whose registered overhead is the 1.0 default",
+                "hlo_peak); act_scale = used_act_scale / min(act_est / "
+                "act_implied_residual); consumed by "
+                "configs.base.get_model_config (overhead) and "
+                "launch.specs.activation_footprint (act_scale) for archs "
+                "left at the 1.0 defaults",
     }
     parent = os.path.dirname(path)
     if parent:

@@ -2,8 +2,11 @@
 
 ``python -m repro.launch.serve --arch <id> --tokens 32`` (also installed as
 the ``repro-serve`` console script).  Every batch/page/shard choice falls
-out of the hierarchical planner's decode workload (DESIGN.md §7): the CLI
-only names the architecture, the prompt mix, and the sampling config.
+out of the hierarchical planner's decode workload (DESIGN.md §7/§8): the
+CLI only names the architecture, the prompt mix, the sampling config, and
+``--batching {cohort,paged,auto}`` -- "auto" (default) picks the paged
+page-pool engine whenever the decode plan exposes a page level (and the
+family has a per-slot decode path), falling back to cohort batching.
 """
 
 from __future__ import annotations
@@ -30,15 +33,24 @@ def main(argv=None) -> int:
     temperature = float(overrides.pop("temperature", "1.0"))
     top_k = int(overrides.pop("top_k", "0"))
     seed = int(overrides.pop("seed", "0"))
+    batching = overrides.pop("batching", "auto")
 
     cfg = get_model_config(arch).reduced()
     sampling = SamplingConfig(kind=kind, temperature=temperature,
                               top_k=top_k or (40 if kind == "top_k" else 0),
                               seed=seed)
+    if batching not in ("cohort", "paged", "auto"):
+        raise SystemExit(f"--batching must be cohort|paged|auto, "
+                         f"got {batching!r}")
+    # "auto" resolves inside ServeEngine against its own decode plan:
+    # paged exactly when the plan exposes a page level and the family has
+    # a per-slot decode path; ``--batching cohort`` keeps the PR 4 engine
+    # as the A/B baseline.
     engine = ServeEngine(
         cfg, make_host_mesh(),
         policy=ServePolicy(max_new_tokens=n_new, max_slots=max(1, batch),
                            max_len=prompt_len + n_new + 1,
+                           batching=batching,
                            sampling=sampling),
         dtype=jax.numpy.float32)
 
@@ -55,13 +67,16 @@ def main(argv=None) -> int:
     n_tok = sum(len(o) for o in outs)
     m = engine.metrics
     print(f"[serve] arch={arch} requests={batch} prompt={prompt_len}"
-          f"{' (mixed)' if mixed else ''} sampling={kind}")
+          f"{' (mixed)' if mixed else ''} sampling={kind} "
+          f"batching={m['batching']}")
     print(f"[serve] plan: page_tokens={m['page_tokens']} "
           f"page_bytes={m['page_bytes']} kv_shard={m['kv_shard']} "
           f"budget={m['budget_bytes'] / 2**30:.1f}GiB")
     print(f"[serve] {n_tok} tokens in {dt:.2f}s ({n_tok / max(dt, 1e-9):.1f} "
           f"tok/s); cohorts={m['cohorts']} decode_steps={m['decode_steps']} "
           f"evictions={m['evictions']} "
+          f"slot_utilization={m.get('slot_utilization', 0.0):.2f} "
+          f"backfills={m.get('backfills', 0)} "
           f"peak_resident={m.get('peak_resident_bytes', 0)}B")
     print(f"[serve] sample continuation ids: {outs[0][:8]}")
     return 0

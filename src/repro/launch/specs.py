@@ -130,7 +130,15 @@ def activation_footprint(cfg: ModelConfig, shape: ShapeConfig,
     residual stream per resident layer (all layers without remat, ~sqrt(L)
     checkpoints with it), a 4x block working-set factor (qkv/ffn
     intermediates), and the fp32 logits buffer.
+
+    The whole estimate is scaled by the measured per-arch ``act_scale``
+    from the calibration artifact when present
+    (``launch/dryrun.py --calibrate`` fits the replicated term against the
+    lowered-HLO residual exactly like it fits ``ModelConfig.overhead``);
+    without an artifact the model above stands as-is.
     """
+    from repro.configs.base import calibration_act_scale
+
     # "full" remat keeps ~sqrt(L) checkpoints resident; "none" keeps every
     # layer, and "dots" saves all dot outputs across all L layers, so both
     # count the full depth.
@@ -139,7 +147,8 @@ def activation_footprint(cfg: ModelConfig, shape: ShapeConfig,
     tokens = shape.global_batch * shape.seq_len
     stream = tokens * cfg.d_model * dtype_bytes * resident_layers * 4
     logits = tokens * cfg.vocab_size * 4
-    return stream + logits
+    scale = calibration_act_scale(getattr(cfg, "arch", "")) or 1.0
+    return int((stream + logits) * scale)
 
 
 def overlap_wire_bytes(m: int, k: int, n: int, p: int, kind: str = "ag",

@@ -174,24 +174,52 @@ def _causal_window_mask(
     return m
 
 
+def attn_mask(
+    q_pos: jax.Array,                  # (Sq,) or (B, Sq)
+    k_pos: jax.Array,                  # (Sk,) or (B, Sk)
+    causal: bool = True,
+    window: int = 0,
+    kv_len: Optional[jax.Array] = None,   # scalar or (B,)
+) -> jax.Array:
+    """Per-row attention mask, shaped ``(B | 1, 1, Sq, Sk)``.
+
+    Positions and the valid cache length may carry a leading batch dim --
+    the per-slot decode path gives every sequence its own absolute
+    position and ``kv_len`` -- or stay 1-D/scalar (the shared-position
+    batches of training and cohort decode).  Negative ``k_pos`` marks
+    empty ring-cache slots and always masks.
+    """
+    qp = jnp.asarray(q_pos)[..., :, None]          # (..., Sq, 1)
+    kp = jnp.asarray(k_pos)[..., None, :]          # (..., 1, Sk)
+    m = kp >= 0
+    if causal or window:
+        m = m & (kp <= qp)
+        if window:
+            m = m & (kp > qp - window)
+    else:
+        m = m & jnp.ones_like(qp, bool)            # broadcast to (.., Sq, Sk)
+    if kv_len is not None:
+        m = m & (kp < jnp.asarray(kv_len)[..., None, None])
+    while m.ndim < 3:
+        m = m[None]
+    return m[:, None]                              # head axis
+
+
 def full_attention(
     q: jax.Array,                  # (B, Sq, H, D)
     k: jax.Array,                  # (B, Sk, H, D)  (already GQA-repeated)
     v: jax.Array,                  # (B, Sk, H, D)
-    q_pos: jax.Array,              # (Sq,) absolute positions
-    k_pos: jax.Array,              # (Sk,)
+    q_pos: jax.Array,              # (Sq,) or (B, Sq) absolute positions
+    k_pos: jax.Array,              # (Sk,) or (B, Sk)
     causal: bool = True,
     window: int = 0,
-    kv_len: Optional[jax.Array] = None,   # valid cache length (decode)
+    kv_len: Optional[jax.Array] = None,   # valid cache length: scalar or (B,)
 ) -> jax.Array:
     scale = 1.0 / math.sqrt(q.shape[-1])
     logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
-    mask = (k_pos >= 0)[None, :]          # ring-cache empty slots are negative
-    if causal or window:
-        mask &= _causal_window_mask(q_pos, k_pos, window)
-    if kv_len is not None:
-        mask &= (k_pos < kv_len)[None, :]
-    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    mask = attn_mask(q_pos, k_pos, causal=causal, window=window,
+                     kv_len=kv_len)
+    logits = jnp.where(mask, logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
     return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
 
@@ -289,12 +317,9 @@ def grouped_attention(
     qg = q.reshape(b, sq, kvh, g, d)
     logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
     logits *= scale
-    mask = (k_pos >= 0)[None, :]
-    if causal or window:
-        mask &= _causal_window_mask(q_pos, k_pos, window)
-    if kv_len is not None:
-        mask &= (k_pos < kv_len)[None, :]
-    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    mask = attn_mask(q_pos, k_pos, causal=causal, window=window,
+                     kv_len=kv_len)                 # (B|1, 1, Sq, Sk)
+    logits = jnp.where(mask[:, :, None], logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
     return out.reshape(b, sq, h, d)
@@ -450,6 +475,66 @@ def attention_block(
     out = out.reshape(b, s, h * hd)
     out = tp_matmul(out, params["wo"].astype(x.dtype), "row")
     return out, new_cache
+
+
+def paged_attention_block(
+    params: dict,
+    x: jax.Array,                  # (S, 1, d) -- one decode token per slot
+    pos: jax.Array,                # (S,) per-slot absolute position
+    cfg: ModelConfig,
+    k_pool: jax.Array,             # (L, P, T, KV, D) page pool
+    v_pool: jax.Array,
+    layer,                         # layer index into the pool (int or traced)
+    table: jax.Array,              # (S, NP) int32 page table
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-slot decode attention against the paged KV pool.
+
+    The per-slot replacement of ``attention_block``'s decode branch: each
+    row carries its own absolute position (per-seq RoPE offset) and its
+    own valid length (``pos + 1`` -- the per-row kv_len mask), so slots at
+    different depths decode in ONE batch.  The new token's K/V is written
+    through the page table (``table[s, pos // T]`` at offset ``pos % T``;
+    empty slots carry ``pos == 0`` and a null table row, so their write
+    lands on the pool's reserved scratch page 0), then the Pallas paged
+    kernel streams the slot's pages -- block size = the planned page.
+    Returns ``(out (S, 1, d), k_pool, v_pool)``.
+    """
+    from repro.kernels.paged_attention import paged_attention
+
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q, k, v = fused_column_matmul(x, (params["wq"].astype(x.dtype),
+                                      params["wk"].astype(x.dtype),
+                                      params["wv"].astype(x.dtype)))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)     # per-seq rope offset
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+
+    t = k_pool.shape[2]
+    page_slot = pos // t
+    n_logical = table.shape[1]
+    page_ids = jnp.take_along_axis(
+        table, jnp.minimum(page_slot, n_logical - 1)[:, None], axis=1)[:, 0]
+    # A position past the table (a table_full stall riding through the
+    # batch) must land on the null page, not clamp onto the slot's last
+    # live page and corrupt it.
+    page_ids = jnp.where(page_slot < n_logical, page_ids, 0)
+    off = pos % t
+    k_pool = k_pool.at[layer, page_ids, off].set(k[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[layer, page_ids, off].set(v[:, 0].astype(v_pool.dtype))
+
+    out = paged_attention(q[:, 0], k_pool[layer], v_pool[layer], table,
+                          pos + 1, window=cfg.sliding_window or 0,
+                          page_tokens=t)
+    out = tp_matmul(out.reshape(b, s, h * hd),
+                    params["wo"].astype(x.dtype), "row")
+    return out, k_pool, v_pool
 
 
 # ---------------------------------------------------------------------------

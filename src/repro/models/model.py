@@ -623,6 +623,105 @@ class Model:
         logits = L.lm_logits(params, x, cfg)
         return logits[:, -1], new_cache
 
+    # ------------------------------------------------------- paged decode
+    def decode_step_paged(self, params: PyTree, cache: PyTree,
+                          batch: Dict[str, jax.Array], dtype=jnp.bfloat16
+                          ) -> Tuple[jax.Array, PyTree]:
+        """One-token decode against the paged KV pool, per-slot state.
+
+        ``cache`` is the pooled layout from ``repro.serve.pages``:
+        ``pool`` (the shared page-pool KV, one entry per attention layer),
+        ``state`` (per-slot recurrent/conv buffers, batch on axis 1),
+        ``table`` (the per-slot page table) and ``pos`` -- a per-slot
+        position VECTOR, the per-slot replacement of the cohort cache's
+        scalar ``pos``: every row carries its own RoPE offset and kv_len
+        mask, so slots at different sequence depths decode as one batch.
+        Rows are independent (attention/norms/MoE routing are all
+        per-row), so empty slots -- ``pos == 0`` with a null table row --
+        decode garbage the engine ignores and overwrites at admission.
+        """
+        cfg = self.cfg
+        fam = cfg.family
+        pos = cache["pos"]
+        table = cache["table"]
+        x = self._embed_in(params, batch, dtype)
+        x = constrain(x, ("batch", None, "embed"))
+        new_cache = dict(cache)
+
+        if fam in ("dense", "moe"):
+            def body(carry, inp):
+                x, kp, vp = carry
+                lp, i = inp
+                h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+                a, kp, vp = L.paged_attention_block(
+                    lp["attn"], h, pos, cfg, kp, vp, i, table)
+                y = constrain(x + a, ("batch", None, "embed"))
+                h = L.rms_norm(y, lp["ln2"], cfg.norm_eps)
+                if fam == "moe":
+                    f, _ = MOE.moe_ffn(lp["moe"], h, cfg.moe,
+                                       self.capacity_factor)
+                else:
+                    f = L.swiglu_ffn(lp["ffn"], h)
+                y = constrain(y + f, ("batch", None, "embed"))
+                return (y, kp, vp), None
+
+            n_scan = jax.tree.leaves(params["layers"])[0].shape[0]
+            (x, kp, vp), _ = jax.lax.scan(
+                body, (x, cache["pool"]["k"], cache["pool"]["v"]),
+                (params["layers"], jnp.arange(n_scan)))
+            new_cache["pool"] = {"k": kp, "v": vp}
+
+        elif fam == "hybrid_ssm":
+            per = cfg.ssm.attn_every or cfg.n_layers
+            kp = vp = None
+            if "k" in cache.get("pool", {}):
+                kp, vp = cache["pool"]["k"], cache["pool"]["v"]
+            mcache = cache["state"]["mamba"]
+            new_mamba = []
+            app = 0
+            for start in range(0, cfg.n_layers, per):
+                stop = min(start + per, cfg.n_layers)
+                if cfg.ssm.attn_every:
+                    ap = params["shared_attn"]
+                    h = L.rms_norm(x, ap["ln1"], cfg.norm_eps)
+                    a, kp, vp = L.paged_attention_block(
+                        ap["attn"], h, pos, cfg, kp, vp, app, table)
+                    x = x + a
+                    h = L.rms_norm(x, ap["ln2"], cfg.norm_eps)
+                    x = x + L.swiglu_ffn(ap["ffn"], h)
+                    app += 1
+                lp_slice = jax.tree.map(lambda a: a[start:stop],
+                                        params["mamba_layers"])
+                c_slice = jax.tree.map(lambda a: a[start:stop], mcache)
+
+                def mscan_c(carry, inp):
+                    lp, c = inp
+                    y, nc = M2.mamba2_block(lp, carry, cfg, c)
+                    return y, nc
+                x, ncs = jax.lax.scan(mscan_c, x, (lp_slice, c_slice))
+                new_mamba.append(ncs)
+            new_cache["state"] = {"mamba": jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, 0), *new_mamba)}
+            if kp is not None:
+                new_cache["pool"] = {"k": kp, "v": vp}
+
+        elif fam == "xlstm":
+            # Pure-recurrent: no paged KV at all -- the per-slot state is
+            # the whole cache, and positions only gate the engine's
+            # bookkeeping (the recurrence itself is position-free).
+            caches = {"mlstm": cache["state"]["mlstm"],
+                      "slstm": cache["state"]["slstm"]}
+            x, ncs = self._xlstm_stack(params, x, caches)
+            new_cache["state"] = {"mlstm": ncs["mlstm"],
+                                  "slstm": ncs["slstm"]}
+        else:
+            raise NotImplementedError(
+                f"paged decode is not implemented for family {fam!r}")
+
+        new_cache["pos"] = pos + 1
+        logits = L.lm_logits(params, x, cfg)
+        return logits[:, -1], new_cache
+
     # ------------------------------------------------------------ prefill
     def prefill(self, params: PyTree, batch: Dict[str, jax.Array],
                 max_len: int, dtype=jnp.bfloat16) -> Tuple[jax.Array, PyTree]:

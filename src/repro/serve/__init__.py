@@ -21,11 +21,28 @@ from repro.serve.kvcache import (  # noqa: F401
     page_spec_from_plan,
     request_state_bytes,
 )
+from repro.serve.pages import (  # noqa: F401
+    PAGED_FAMILIES,
+    PagePool,
+    PagedScheduler,
+    init_paged_cache,
+    install_slot,
+    paged_cache_logical_axes,
+)
 from repro.serve.sampling import SamplingConfig, sample  # noqa: F401
 from repro.serve.scheduler import Request, ServeScheduler  # noqa: F401
-from repro.serve.steps import ServeSteps, make_serve_steps  # noqa: F401
+from repro.serve.steps import (  # noqa: F401
+    PagedServeSteps,
+    ServeSteps,
+    make_paged_steps,
+    make_serve_steps,
+)
 
 __all__ = [
+    "PAGED_FAMILIES",
+    "PagePool",
+    "PagedScheduler",
+    "PagedServeSteps",
     "PageSpec",
     "Request",
     "SamplingConfig",
@@ -35,9 +52,13 @@ __all__ = [
     "ServeSteps",
     "align_capacity",
     "grow_cache",
+    "init_paged_cache",
+    "install_slot",
     "kv_token_bytes",
+    "make_paged_steps",
     "make_serve_steps",
     "page_spec_from_plan",
+    "paged_cache_logical_axes",
     "plan_decode",
     "request_state_bytes",
     "sample",

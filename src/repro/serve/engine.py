@@ -16,10 +16,18 @@ One declarative call -- ``ServeEngine(cfg, mesh, policy).generate(prompts)``
   * ``serve.steps.make_serve_steps(..., decode_plan=...)`` lowers the steps
     with exactly the plan's cache sharding.
 
-The batch unit is a *cohort* of same-shape prompts (the family decode step
-carries one scalar position per batch -- see ``serve.scheduler``); mixed
-prompt lengths run as concurrently decoded cohorts, one decode step per
-cohort per engine tick with admissions (prefills) interleaved in between.
+Two batching engines share the plan (``ServePolicy.batching``):
+
+  * ``"cohort"`` (PR 4, the A/B baseline): the batch unit is a *cohort*
+    of same-shape prompts (the family decode step carries one scalar
+    position per batch); mixed prompt lengths run as concurrently decoded
+    cohorts, one decode step per cohort per engine tick.
+  * ``"paged"`` (DESIGN.md §8): a fixed batch of decode *slots* over one
+    global page pool (``serve.pages``).  Decode is per-slot end to end --
+    position vectors, per-row kv_len masks, a Pallas paged-attention
+    gather through per-slot page tables -- so a finished slot's pages
+    free immediately and the slot is backfilled by a NEW request
+    mid-flight, and the whole run is one jit bucket.
 """
 
 from __future__ import annotations
@@ -115,14 +123,28 @@ def plan_decode(
 @dataclass(frozen=True)
 class ServePolicy:
     """Engine knobs. Everything memory-shaped defaults from the plan; the
-    overrides exist for tests and for operators who know better."""
+    overrides exist for tests and for operators who know better.
+
+    ``batching`` selects the engine: "cohort" (PR 4's position-homogeneous
+    cohorts -- the A/B baseline), "paged" (the global page pool with
+    per-slot continuous batching, DESIGN.md §8; families without a paged
+    decode path -- MLA, enc-dec, VLM -- fall back to cohort), or "auto"
+    (paged exactly when the decode plan exposes a page level to size the
+    pool from AND the family has a per-slot decode path).
+    """
 
     max_new_tokens: int = 16
-    max_slots: int = 8              # sequences per cohort
+    max_slots: int = 8              # sequences per cohort / decode slots
     max_len: int = 4096             # per-sequence planning bound (tokens)
     kv_fraction: float = 0.8        # share of post-weights HBM given to KV
     kv_budget_bytes: Optional[int] = None   # override the planned budget
+    batching: str = "cohort"        # | "paged" | "auto"
     sampling: SamplingConfig = field(default_factory=SamplingConfig)
+
+    def __post_init__(self):
+        if self.batching not in ("cohort", "paged", "auto"):
+            raise ValueError(f"unknown batching {self.batching!r}; "
+                             f"one of ('cohort', 'paged', 'auto')")
 
 
 @dataclass
@@ -172,23 +194,41 @@ class ServeEngine:
                                                   self._dtype_bytes)
         self.scheduler = ServeScheduler(
             self._kv_budget(), self.page, max_slots=policy.max_slots)
+        from repro.serve.pages import PAGED_FAMILIES
+        self.batching = policy.batching
+        if self.batching == "auto":
+            # Paged exactly when the plan exposes a page level to size the
+            # pool from (token-free families have none) and the family has
+            # a per-slot decode path; explicit "paged" still serves
+            # page-free families (xLSTM) at slot granularity.
+            self.batching = ("paged" if self.plan.page_plan() is not None
+                             and cfg.family in PAGED_FAMILIES else "cohort")
+        elif self.batching == "paged" and cfg.family not in PAGED_FAMILIES:
+            self.batching = "cohort"        # no paged decode path: fall back
         from repro.models.model import build_model
         self.model = build_model(cfg, remat="none")
         self.params = (params if params is not None
                        else self.model.init(jax.random.PRNGKey(seed),
                                             dtype=jnp.float32))
         self._steps_cache: Dict[Any, ServeSteps] = {}
+        self._paged_steps_cache: Dict[Any, Any] = {}
         self._next_rid = 0
         self.metrics: Dict[str, Any] = {
+            "batching": self.batching,
             "page_tokens": self.page.page_tokens,
             "page_bytes": self.page.page_bytes,
             "budget_bytes": self.scheduler.budget_bytes,
             "kv_shard": self.plan.kv_shard(),
+            "plan_page_table": dict(self.plan.page_table() or {}),
             "tokens": 0,
             "decode_steps": 0,
             "cohorts": 0,
             "evictions": 0,
             "capacities": [],
+            "slot_steps": 0,
+            "active_slot_steps": 0,
+            "backfills": 0,
+            "stalls": 0,
         }
 
     # ------------------------------------------------------------- plan reads
@@ -227,7 +267,8 @@ class ServeEngine:
             return {k: np.asarray(v) for k, v in prompt.items()}
         return {"tokens": np.asarray(prompt, dtype=np.int32)}
 
-    def _make_request(self, prompt, max_new: int) -> Request:
+    def _make_request(self, prompt, max_new: int,
+                      paged: bool = False) -> Request:
         feats = self._normalize_prompt(prompt)
         if "tokens" in feats:
             plen = int(feats["tokens"].shape[-1])
@@ -240,9 +281,11 @@ class ServeEngine:
         # Fixed-extent caches (sliding-window rings) allocate their full
         # window-clamped capacity at admission and never grow, so the slot
         # must be billed for all of it up front; growable caches pin only
-        # prompt + the first decode page (the Request default).
+        # prompt + the first decode page (the Request default).  The paged
+        # pool has no ring buffers -- windowed slots grow page by page and
+        # reclaim out-of-window pages -- so admission is always prompt + 1.
         admit_tokens = None
-        if not self._growable() and self.cfg.sliding_window:
+        if not paged and not self._growable() and self.cfg.sliding_window:
             admit_tokens = min(plen + max_new + 1, self.cfg.sliding_window)
         return Request(
             rid=rid, prompt_len=plen, max_new=max_new,
@@ -392,6 +435,12 @@ class ServeEngine:
         run.next_tokens = toks[:, None].astype(jnp.int32)
         run.pos += 1
         self.metrics["decode_steps"] += 1
+        # Utilization: this step decoded len(reqs) rows, of which only the
+        # still-active ones deliver a token (finished slots ride along
+        # until the next growth-boundary compaction -- the cohort tax the
+        # paged engine's backfill removes).
+        self.metrics["slot_steps"] += len(run.reqs)
+        self.metrics["active_slot_steps"] += len(run.active)
         self._emit(run, toks, outputs, scfg)
 
     # --------------------------------------------------------------- generate
@@ -418,6 +467,10 @@ class ServeEngine:
             raise ValueError(
                 f"max_new_tokens: expected one int or {len(prompts)} "
                 f"entries, got {len(max_new)}")
+        if not prompts:
+            return []
+        if self.batching == "paged":
+            return self._generate_paged(prompts, max_new, scfg)
         reqs = [self._make_request(p, n) for p, n in zip(prompts, max_new)]
         for r in reqs:
             self.scheduler.submit(r)
@@ -445,7 +498,253 @@ class ServeEngine:
                     del runs[cid]
             assert self.scheduler.allocated_bytes <= \
                 self.scheduler.budget_bytes, "resident KV exceeded the plan"
+            self.scheduler.assert_reconciled()
             if not progressed:
                 raise RuntimeError("scheduler stalled with pending work")
         self.metrics["peak_resident_bytes"] = self.scheduler.peak_bytes
+        self.metrics["pages_allocated"] = self.scheduler.pages_allocated
+        self.metrics["pages_released"] = self.scheduler.pages_released
+        self._finalize_utilization()
+        return [outputs[r.rid] for r in reqs]
+
+    def _finalize_utilization(self) -> None:
+        steps = self.metrics["slot_steps"]
+        self.metrics["slot_utilization"] = (
+            self.metrics["active_slot_steps"] / steps if steps else 0.0)
+
+    # ------------------------------------------------------- paged batching
+    def _paged_slots(self, reqs: List[Request]) -> int:
+        """Decode-batch width: ``max_slots`` capped at the trace -- never
+        allocate (and bill utilization for) slots no request can occupy,
+        so ``slot_utilization`` is comparable with cohort mode even when
+        requests < max_slots."""
+        return max(1, min(self.policy.max_slots, len(reqs)))
+
+    def _paged_geometry(self, reqs: List[Request], n_slots: int):
+        """Pool geometry from the plan (DESIGN.md §8): the logical table
+        width is the plan's per-slot page bound, stretched to the longest
+        submitted request; the physical pool is the planned KV budget in
+        pages, capped at what the slots can ever pin (plus the null
+        page)."""
+        page = self.page
+        if page.page_bytes <= 0:          # token-free family (xLSTM)
+            return 1, 2
+        ptab = self.plan.page_table() or {}
+        need = max(page.pages_for(r.prompt_len + r.max_new + 1)
+                   for r in reqs)
+        pages_per_slot = max(int(ptab.get("pages_per_slot") or 1), need)
+        budget_pages = max(1, self.scheduler.budget_bytes // page.page_bytes)
+        pages_total = 1 + min(budget_pages, n_slots * pages_per_slot)
+        return pages_per_slot, pages_total
+
+    def _paged_steps(self, cache, n_slots: int, pages_total: int,
+                     pages_per_slot: int):
+        from repro.serve.steps import make_paged_steps
+
+        key = (n_slots, pages_total, pages_per_slot,
+               self.page.page_tokens)
+        ss = self._paged_steps_cache.get(key)
+        if ss is None:
+            ss = make_paged_steps(
+                self.cfg, self.mesh, cache,
+                n_slots=n_slots, max_len=self.policy.max_len,
+                dtype=self.dtype, decode_plan=self.plan)
+            self._paged_steps_cache[key] = ss
+        return ss
+
+    def _generate_paged(self, prompts: Sequence[Any], max_new: List[int],
+                        scfg: SamplingConfig) -> List[List[int]]:
+        """Per-slot continuous batching over the global page pool.
+
+        A fixed batch of ``max_slots`` decode slots shares ONE page pool
+        and ONE jitted decode program (static pool/table/slot shapes --
+        no per-capacity retraces).  Each tick admits pending requests into
+        free slots (single-request prefill scattered into freshly
+        allocated pages), then decodes every slot at its own position
+        (per-slot position vector, per-row kv_len masks, paged-attention
+        gather).  A finished slot's pages free immediately and the slot is
+        backfilled mid-flight -- the utilization win over cohort mode.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        from repro.serve.pages import (
+            PagePool,
+            PagedScheduler,
+            init_paged_cache,
+            install_slot,
+        )
+
+        reqs = [self._make_request(p, n, paged=True)
+                for p, n in zip(prompts, max_new)]
+        outputs: Dict[int, List[int]] = {r.rid: [] for r in reqs}
+        n_slots = self._paged_slots(reqs)
+        page = self.page
+        window = self.cfg.sliding_window
+        pages_per_slot, pages_total = self._paged_geometry(reqs, n_slots)
+        pool = PagePool(pages_total)
+        sched = PagedScheduler(pool, page, n_slots, pages_per_slot,
+                               window=window)
+        cache = init_paged_cache(self.cfg, self.model, n_slots, pages_total,
+                                 page.page_tokens, pages_per_slot,
+                                 self.dtype)
+        steps = self._paged_steps(cache, n_slots, pages_total,
+                                  pages_per_slot)
+        self.metrics["pages_total"] = pages_total - 1     # usable pages
+        self.metrics["pages_per_slot"] = pages_per_slot
+
+        table_np = np.zeros((n_slots, pages_per_slot), np.int32)
+        pos_np = np.zeros((n_slots,), np.int32)
+        next_np = np.zeros((n_slots, 1), np.int32)
+        ever_occupied: set = set()
+        requeued: set = set()           # rids re-admitting after preemption
+        peak_pages = 0
+        for r in reqs:
+            sched.submit(r)
+        step = 0
+
+        def clear_slot(i: int) -> None:
+            table_np[i] = 0
+            pos_np[i] = 0
+            next_np[i, 0] = 0
+
+        def emit_token(slot: int, rid: int, max_new_bound: int,
+                       tok: int) -> None:
+            """Deliver one sampled token for a slot: record it, queue it
+            as the slot's next input, reclaim out-of-window pages, and
+            retire the slot when its request is done (pages free at once
+            -- the next admission backfills)."""
+            outputs[rid].append(tok)
+            self.metrics["tokens"] += 1
+            next_np[slot, 0] = tok
+            if window:
+                sched.reclaim_window(slot, window)
+            if len(outputs[rid]) >= max_new_bound or \
+                    (scfg.eos_id is not None and tok == scfg.eos_id):
+                sched.finish(slot)
+                clear_slot(slot)
+
+        while sched.has_work():
+            progressed = False
+            # Capacity FIRST, oldest request first: growth claims its pages
+            # before admission can hand the last free ones to a new request
+            # whose just-run prefill an older grower would immediately
+            # evict.  An older slot preempts strictly-younger victims
+            # (recompute); a slot with no younger victim STALLS this tick
+            # (pages pinned, decode skipped) -- the oldest slot always
+            # progresses, so no eviction ping-pong.
+            stalled: set = set()
+            for i in sorted(sched.active(),
+                            key=lambda j: sched.slots[j].rid):
+                if sched.slots[i] is None:
+                    continue                  # evicted by an older grower
+                while not sched.ensure_capacity(i):
+                    if sched.table_full(i):
+                        stalled.add(i)    # eviction cannot widen the table
+                        self.metrics["stalls"] += 1
+                        break
+                    victim = sched.victim(i)
+                    if victim is None:
+                        if len(sched.active()) == 1:
+                            raise RuntimeError(
+                                f"page pool ({pool.pages_total - 1} pages)"
+                                f" cannot hold one growing sequence; "
+                                f"raise kv_budget_bytes")
+                        stalled.add(i)
+                        self.metrics["stalls"] += 1
+                        break
+                    # Recompute preemption: the victim's tokens
+                    # regenerate from scratch after re-admission.
+                    vreq = sched.evict(victim)
+                    self.metrics["tokens"] -= len(outputs[vreq.rid])
+                    outputs[vreq.rid] = []
+                    requeued.add(vreq.rid)
+                    clear_slot(victim)
+                    self.metrics["evictions"] += 1
+
+            for slot, req, pages in sched.admit():
+                plen = req.prompt_len
+                if self._growable():
+                    cap = align_capacity(plen + 1, page)
+                else:
+                    cap = plen + req.max_new + 1
+                ss = self._steps(1, plen, cap)
+                logits, pre_cache = ss.prefill(
+                    self.params, self._stack_features([req]))
+                cache = install_slot(self.cfg, cache, slot, pre_cache,
+                                     pages, plen)
+                row = [p if p is not None else 0 for p in pages]
+                table_np[slot] = 0
+                table_np[slot, :len(row)] = row
+                pos_np[slot] = plen
+                tok = int(np.asarray(
+                    sample(logits, scfg, step_key(scfg, step))).reshape(-1)[0])
+                step += 1
+                # A backfill is a NEW request taking a previously used
+                # slot mid-flight; a preempted request's own recompute
+                # re-admission is not one.
+                if slot in ever_occupied and req.rid not in requeued:
+                    self.metrics["backfills"] += 1
+                requeued.discard(req.rid)
+                ever_occupied.add(slot)
+                emit_token(slot, req.rid, req.max_new, tok)
+                progressed = True
+
+            active = [i for i in sched.active() if i not in stalled]
+            if active:
+                # Refresh the device-side page tables from the scheduler:
+                # growth appended pages, reclaim nulled out-of-window ones.
+                for i in sched.active():
+                    row = [p if p is not None else 0
+                           for p in sched.slots[i].pages]
+                    table_np[i, :len(row)] = row
+                    table_np[i, len(row):] = 0
+                cache["table"] = jnp.asarray(table_np)
+                cache["pos"] = jnp.asarray(pos_np)
+                # Stalled slots still ride through the decode batch.  Their
+                # KV writes land on the null page (their table has no entry
+                # at pos // T yet), but RECURRENT state (Mamba/xLSTM) would
+                # advance on the discarded tick and double-apply the input
+                # token on resume -- so snapshot their state rows and
+                # restore them after the step (rare: stalls only happen
+                # under pool pressure).
+                stalled_live = [i for i in stalled
+                                if sched.slots[i] is not None]
+                snapshot = None
+                if stalled_live and cache.get("state"):
+                    sl = jnp.asarray(stalled_live)
+                    snapshot = jax.tree.map(lambda a: a[:, sl],
+                                            cache["state"])
+                logits, cache = steps.decode(
+                    self.params, cache, {"tokens": jnp.asarray(next_np)})
+                if snapshot is not None:
+                    cache["state"] = jax.tree.map(
+                        lambda ns, snap: ns.at[:, sl].set(snap),
+                        cache["state"], snapshot)
+                toks = np.asarray(
+                    sample(logits, scfg, step_key(scfg, step))).reshape(-1)
+                step += 1
+                self.metrics["decode_steps"] += 1
+                self.metrics["slot_steps"] += n_slots
+                self.metrics["active_slot_steps"] += len(active)
+                for i in active:
+                    s = sched.slots[i]
+                    s.pos += 1
+                    pos_np[i] = s.pos
+                    emit_token(i, s.rid, s.req.max_new, int(toks[i]))
+                progressed = True
+
+            peak_pages = max(peak_pages, pool.used_pages)
+            assert pool.used_pages == sched.used_pages_by_slots(), \
+                "page pool out of sync with the slot tables"
+            assert pool.pages_allocated - pool.pages_released == \
+                pool.used_pages, "page accounting leak"
+            if not progressed:
+                raise RuntimeError("scheduler stalled with pending work")
+
+        self.metrics["peak_resident_bytes"] = peak_pages * page.page_bytes
+        self.metrics["peak_pages"] = peak_pages
+        self.metrics["pages_allocated"] = pool.pages_allocated
+        self.metrics["pages_released"] = pool.pages_released
+        self._finalize_utilization()
         return [outputs[r.rid] for r in reqs]

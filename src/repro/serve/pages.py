@@ -1,0 +1,453 @@
+"""The global KV page pool: plan-sized pages, per-slot tables, slot-level
+admission (DESIGN.md §8).
+
+PR 4's cohort engine made the plan's VMEM page the *growth* granule, but
+allocation stayed per cohort: a finished slot's pages were pinned until its
+whole cohort retired (or the next growth-boundary compaction).  This module
+makes the page a real ALLOCATION unit across requests, the way hierarchical
+runtimes own placement instead of the caller (Thibault et al.; Rasch's
+(de/re)-composition):
+
+  * ``PagePool`` -- the physical pool: ``pages_total`` pages of
+    ``page_plan()["page_tokens"]`` tokens each, a free list, and cumulative
+    alloc/release counters (the accounting the property tests pin).
+    Physical page 0 is the reserved *null page*: empty slots' decode
+    writes land there and nothing ever reads it unmasked.
+  * ``PagedScheduler`` -- slot-level admission, pure python: a fixed batch
+    of decode *slots*, FIFO admission of one request per free slot
+    (``pages_for(prompt + 1)`` pages up front), one-page growth, youngest
+    -slot recompute preemption, and sliding-window page reclaim (a page
+    wholly below ``pos - window`` frees immediately -- the paged answer to
+    the ring buffer).  A finished slot frees its pages at once and is
+    backfilled by the next pending request mid-flight: continuous batching
+    at slot granularity.
+  * ``init_paged_cache`` / ``install_slot`` -- the pooled cache pytree the
+    paged decode step (``Model.decode_step_paged``) consumes: ``pool``
+    (one shared ``(L, P, T, KV, D)`` buffer per attention-layer group),
+    ``state`` (per-slot recurrent/conv buffers, batch on axis 1),
+    ``table`` (the per-slot page table) and the per-slot position vector
+    ``pos``.  ``install_slot`` scatters a single-request prefill cache
+    into the slot's pages and state rows (ring-rotated window prefills are
+    un-rotated through their ``pos mod w`` slot map first).
+
+One decode jit bucket serves the whole run -- pool, table and slot count
+are static shapes -- where the cohort engine retraces per capacity step.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.serve.kvcache import PageSpec
+from repro.serve.scheduler import Request
+
+PyTree = Any
+
+#: Families with a per-slot paged decode path (``Model.decode_step_paged``).
+#: MLA's latent cache and enc-dec's encoder-keyed cross K/V are future
+#: work; the engine falls back to cohort batching for them.
+PAGED_FAMILIES = ("dense", "moe", "hybrid_ssm", "xlstm")
+
+
+# ---------------------------------------------------------------------------
+# Physical pool
+# ---------------------------------------------------------------------------
+
+
+class PagePool:
+    """Free-list allocator over the physical page pool.
+
+    ``pages_total`` includes the reserved null page 0, which is never
+    allocated or freed.  ``pages_allocated`` / ``pages_released`` are
+    cumulative, so ``pages_allocated - pages_released == used_pages`` is
+    an invariant the scheduler property test reconciles after every op.
+    """
+
+    def __init__(self, pages_total: int):
+        if pages_total < 2:
+            raise ValueError(
+                f"pages_total must be >= 2 (null page + one usable page), "
+                f"got {pages_total}")
+        self.pages_total = int(pages_total)
+        # pop() yields ascending physical ids -- deterministic layouts.
+        self._free = list(range(self.pages_total - 1, 0, -1))
+        self.pages_allocated = 0
+        self.pages_released = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.pages_total - 1) - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """``n`` physical pages, or None when the pool cannot hold them
+        (never a partial grant)."""
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        self.pages_allocated += n
+        return out
+
+    def free(self, ids: Sequence[int]) -> None:
+        for i in ids:
+            if i == 0:
+                raise ValueError("page 0 is the reserved null page")
+            self._free.append(i)
+        self.pages_released += len(ids)
+
+
+# ---------------------------------------------------------------------------
+# Slot-level scheduler
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SlotState:
+    """One occupied decode slot.  ``pages`` maps logical page index ->
+    physical page id, ``None`` marking a window-reclaimed page (its tokens
+    fell out of the sliding window; the table keeps pointing at the null
+    page and the kernel's window mask never reads them)."""
+
+    rid: int
+    req: Request
+    pos: int                        # resident tokens (prompt, then +1/step)
+    pages: List[Optional[int]] = field(default_factory=list)
+
+    @property
+    def live_pages(self) -> List[int]:
+        return [p for p in self.pages if p is not None]
+
+
+class PagedScheduler:
+    """Slot-level admission under the page-pool budget (pure python).
+
+    The schedulable unit is one SLOT of a fixed decode batch -- not a
+    cohort -- so a finished sequence's pages free immediately and the slot
+    is backfilled by the next pending request between decode ticks.
+    Rules:
+
+      * **admit**   FIFO: the head request takes any free slot iff the pool
+        can grant its LIVE page demand -- ``pages_for(prompt + 1)`` minus
+        the pages wholly below ``prompt - window`` for sliding-window
+        families (those logical pages are born reclaimed: placeholder
+        ``None`` entries, never allocated, masked by the kernel), and 0
+        for token-free families.  A lone head that can never fit an empty
+        pool raises.
+      * **grow**    one page per slot when ``pos + 1`` crosses the slot's
+        capacity; refusal (pool empty) makes the engine preempt or stall.
+      * **victim**  the slot holding the newest request strictly younger
+        than the grower's (least sunk cost; rids survive requeueing so a
+        preempted request keeps its seniority).  A grower with no younger
+        victim STALLS for the tick instead -- pages pinned, decode
+        skipped -- so mutual eviction ping-pong cannot happen and the
+        oldest request always progresses.
+      * **reclaim** pages wholly below ``pos - window`` free immediately
+        (sliding-window families only).
+    """
+
+    def __init__(self, pool: PagePool, page: PageSpec, n_slots: int,
+                 pages_per_slot: int, window: int = 0):
+        self.pool = pool
+        self.page = page
+        self.n_slots = max(1, n_slots)
+        self.pages_per_slot = max(1, pages_per_slot)
+        self.window = max(0, window)
+        self.slots: List[Optional[SlotState]] = [None] * self.n_slots
+        self.pending: Deque[Request] = deque()
+        self.n_evictions = 0
+
+    # ----------------------------------------------------------- inventory
+    def has_work(self) -> bool:
+        return bool(self.pending) or any(s is not None for s in self.slots)
+
+    def active(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def used_pages_by_slots(self) -> int:
+        return sum(len(s.live_pages) for s in self.slots if s is not None)
+
+    def _admit_pages(self, req: Request) -> Tuple[int, int]:
+        """``(live, dead)`` logical page counts at admission: only ``live``
+        pages are allocated; ``dead`` pages are wholly below
+        ``prompt - window`` (their tokens can never attend) and enter the
+        slot as ``None`` placeholders -- the same state window reclaim
+        leaves behind -- so a long windowed prompt is billed for its
+        RESIDENT window, not its full length."""
+        if self.page.page_bytes <= 0:
+            return 0, 0                   # token-free family (xLSTM)
+        total = self.page.pages_for(req.prompt_len + 1)
+        dead = 0
+        if self.window:
+            dead = max(0, req.prompt_len - self.window) \
+                // self.page.page_tokens
+        return total - dead, dead
+
+    # ----------------------------------------------------------- admission
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+
+    def admit(self) -> List[Tuple[int, Request, List[Optional[int]]]]:
+        """Fill free slots from the queue head.  Returns
+        ``[(slot, request, logical_pages), ...]`` where ``logical_pages``
+        maps logical page index -> physical id, with ``None`` marking
+        born-reclaimed out-of-window pages; the engine prefills each
+        request and installs it into its slot."""
+        out: List[Tuple[int, Request, List[Optional[int]]]] = []
+        for slot, s in enumerate(self.slots):
+            if s is not None or not self.pending:
+                continue
+            head = self.pending[0]
+            live, dead = self._admit_pages(head)
+            ids = self.pool.alloc(live)
+            if ids is None:
+                if not any(x is not None for x in self.slots) and not out:
+                    raise ValueError(
+                        f"request {head.rid} needs {live} KV pages; the "
+                        f"pool holds {self.pool.pages_total - 1} -- raise "
+                        f"kv_budget_bytes or shorten the prompt")
+                break                     # wait for running slots to free
+            self.pending.popleft()
+            pages: List[Optional[int]] = [None] * dead + list(ids)
+            self.slots[slot] = SlotState(rid=head.rid, req=head,
+                                         pos=head.prompt_len,
+                                         pages=pages)
+            out.append((slot, head, list(pages)))
+        return out
+
+    # -------------------------------------------------------------- growth
+    def ensure_capacity(self, slot: int) -> bool:
+        """Make room for one more token in ``slot``.  True when the slot
+        already has capacity or one page was granted; False when the pool
+        is exhausted (the engine then preempts and retries) or the slot's
+        logical page table is full (``pages_per_slot`` -- check
+        ``table_full`` to tell the cases apart: eviction cannot help a
+        full table)."""
+        s = self.slots[slot]
+        if self.page.page_bytes <= 0:
+            return True
+        if s.pos + 1 <= len(s.pages) * self.page.page_tokens:
+            return True
+        if len(s.pages) >= self.pages_per_slot:
+            return False
+        ids = self.pool.alloc(1)
+        if ids is None:
+            return False
+        s.pages.extend(ids)
+        return True
+
+    def table_full(self, slot: int) -> bool:
+        """True when the slot has exhausted its logical page table (its
+        sequence hit the ``pages_per_slot`` bound)."""
+        s = self.slots[slot]
+        return self.page.page_bytes > 0 and len(s.pages) >= \
+            self.pages_per_slot
+
+    def victim(self, protect: int) -> Optional[int]:
+        """Preemption victim: the occupied slot holding the newest request
+        STRICTLY YOUNGER than ``protect``'s (rids are assigned at
+        submission and survive requeueing, so re-admitted requests keep
+        their seniority).  Restricting victims to younger slots is what
+        makes preemption livelock-free: two growing slots can never evict
+        each other in a ping-pong -- the younger one *stalls* (keeps its
+        pages, skips the tick) until the older finishes, and the oldest
+        slot always makes progress."""
+        mine = self.slots[protect].rid
+        others = [i for i, s in enumerate(self.slots)
+                  if s is not None and i != protect and s.rid > mine]
+        if not others:
+            return None
+        return max(others, key=lambda i: self.slots[i].rid)
+
+    def evict(self, slot: int) -> Request:
+        """Recompute preemption: free the slot's pages and requeue its
+        request at the FRONT of the queue."""
+        s = self.slots[slot]
+        self.pool.free(s.live_pages)
+        self.slots[slot] = None
+        self.pending.appendleft(s.req)
+        self.n_evictions += 1
+        return s.req
+
+    # ---------------------------------------------------------- retirement
+    def finish(self, slot: int) -> None:
+        s = self.slots[slot]
+        self.pool.free(s.live_pages)
+        self.slots[slot] = None
+
+    def reclaim_window(self, slot: int, window: int) -> List[int]:
+        """Free pages wholly below ``pos - window`` (their tokens can never
+        attend again).  The page table keeps its logical shape; freed
+        entries are masked by the kernel's window mask even after the
+        physical page is rewritten by another slot."""
+        s = self.slots[slot]
+        if not window or self.page.page_bytes <= 0:
+            return []
+        lo = s.pos - window
+        freed: List[int] = []
+        for j, p in enumerate(s.pages):
+            if p is not None and (j + 1) * self.page.page_tokens <= lo:
+                freed.append(p)
+                s.pages[j] = None
+        if freed:
+            self.pool.free(freed)
+        return freed
+
+
+# ---------------------------------------------------------------------------
+# Pooled cache pytree
+# ---------------------------------------------------------------------------
+
+
+def _n_attn_apps(cfg: ModelConfig) -> int:
+    s = cfg.ssm
+    return -(-cfg.n_layers // s.attn_every) if (s and s.attn_every) else 0
+
+
+def init_paged_cache(cfg: ModelConfig, model, n_slots: int, n_pages: int,
+                     page_tokens: int, n_logical_pages: int,
+                     dtype) -> PyTree:
+    """The pooled cache pytree ``Model.decode_step_paged`` consumes.
+
+    ``pool`` holds the shared page pool per attention-layer group
+    (``(L, n_pages, page_tokens, KV, D)``), ``state`` the per-slot
+    recurrent/conv buffers (batch on axis 1, taken from the family's
+    ``init_cache`` shapes), ``table`` the ``(n_slots, n_logical_pages)``
+    page table (0 = null page) and ``pos`` the per-slot position vector.
+    """
+    import jax.numpy as jnp
+
+    fam = cfg.family
+    if fam not in PAGED_FAMILIES:
+        raise NotImplementedError(
+            f"paged serving is not implemented for family {fam!r}")
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+
+    def pool_kv(nl):
+        return {"k": jnp.zeros((nl, n_pages, page_tokens, kv, hd), dtype),
+                "v": jnp.zeros((nl, n_pages, page_tokens, kv, hd), dtype)}
+
+    cache: Dict[str, Any] = {
+        "table": jnp.zeros((n_slots, n_logical_pages), jnp.int32),
+        "pos": jnp.zeros((n_slots,), jnp.int32),
+        "pool": {},
+        "state": {},
+    }
+    if fam in ("dense", "moe"):
+        cache["pool"] = pool_kv(cfg.n_layers)
+    elif fam == "hybrid_ssm":
+        base = model.init_cache(n_slots, page_tokens, dtype)
+        cache["state"] = {"mamba": base["mamba"]}
+        n_apps = _n_attn_apps(cfg)
+        if n_apps:
+            cache["pool"] = pool_kv(n_apps)
+    elif fam == "xlstm":
+        base = model.init_cache(n_slots, page_tokens, dtype)
+        cache["state"] = {"mlstm": base["mlstm"], "slstm": base["slstm"]}
+    return cache
+
+
+#: Which prefill-cache subtree feeds the pool vs the per-slot state, per
+#: family (the other leaves -- ``len``, ``pos`` -- are superseded by the
+#: per-slot position vector).
+_POOL_GROUP = {"dense": "layers", "moe": "layers", "hybrid_ssm": "attn"}
+_STATE_GROUPS = {"hybrid_ssm": ("mamba",), "xlstm": ("mlstm", "slstm")}
+
+
+def install_slot(cfg: ModelConfig, cache: PyTree, slot: int,
+                 prefill_cache: PyTree, page_ids: Sequence[int],
+                 prompt_len: int) -> PyTree:
+    """Scatter one request's single-sequence prefill cache into its slot.
+
+    KV leaves land in the slot's freshly allocated pages (``page_ids``,
+    logical order); recurrent/conv state overwrites the slot's batch row.
+    Sliding-window prefills whose prompt overflowed the ring are
+    un-rotated first (slot ``a mod w`` holds absolute position ``a``), and
+    out-of-window positions simply stay on the null page -- the kernel's
+    window mask never reads them.
+
+    Known trade: this runs un-jitted, so the functional ``.at[].set`` on
+    the pool copies the whole pool buffer per admission -- O(pool), fine
+    at CPU test scale but the wrong cost on HBM-sized pools.  The fix is
+    the ROADMAP's chunked-prefill item: write prompt KV into the pages
+    directly from a jitted, buffer-donating prefill instead of copying a
+    dense prefill cache in afterwards.
+    """
+    import jax.numpy as jnp
+
+    fam = cfg.family
+    new_cache = dict(cache)
+    group = _POOL_GROUP.get(fam)
+    live = [(j, p) for j, p in enumerate(page_ids) if p is not None]
+    if group is not None and group in prefill_cache and cache["pool"] \
+            and live:
+        t = cache["pool"]["k"].shape[2]
+        n_pages = len(page_ids)
+        logical = jnp.asarray([j for j, _ in live])
+        phys = jnp.asarray([p for _, p in live], jnp.int32)
+        pool = dict(cache["pool"])
+        for name in ("k", "v"):
+            leaf = prefill_cache[group][name]      # (L, 1, s_kv, KV, HD)
+            w = leaf.shape[2]
+            lo = 0
+            if cfg.sliding_window and w <= cfg.sliding_window \
+                    and prompt_len >= w:
+                lo = prompt_len - w                # ring overflowed: tail only
+                idx = jnp.arange(lo, prompt_len) % w
+                toks = leaf[:, 0, idx]
+            else:
+                toks = leaf[:, 0, :prompt_len]
+            buf = jnp.zeros((leaf.shape[0], n_pages * t) + leaf.shape[3:],
+                            leaf.dtype)
+            buf = buf.at[:, lo:prompt_len].set(toks)
+            buf = buf.reshape((leaf.shape[0], n_pages, t) + leaf.shape[3:])
+            # Only live pages are written: ``None`` entries (born-reclaimed
+            # out-of-window pages) have no physical page to hold them.
+            pool[name] = pool[name].at[:, phys].set(buf[:, logical])
+        new_cache["pool"] = pool
+    state_groups = _STATE_GROUPS.get(fam, ())
+    if state_groups:
+        import jax
+
+        state = dict(cache["state"])
+        for g in state_groups:
+            state[g] = jax.tree.map(
+                lambda dst, src: dst.at[:, slot].set(
+                    src[:, 0].astype(dst.dtype)),
+                state[g], prefill_cache[g])
+        new_cache["state"] = state
+    return new_cache
+
+
+# ---------------------------------------------------------------------------
+# Sharding axes for the pooled layout (consumed by serve.steps)
+# ---------------------------------------------------------------------------
+
+
+def paged_cache_logical_axes(cfg: ModelConfig, cache: PyTree) -> PyTree:
+    """Logical sharding axes for the pooled cache: pool KV shards over
+    heads exactly like the dense cache (``with_kv_sharding`` decides
+    whether "kv_heads" maps to the model axis); the page dim ("kv_pages")
+    is a pool dim and never shards -- a page is the VMEM streaming granule
+    of ONE chip.  Per-slot state reuses the dense cache's axis names via
+    ``launch.specs.cache_logical_axes``."""
+    from repro.launch.specs import cache_logical_axes
+
+    axes: Dict[str, Any] = {
+        "table": (None, None),
+        "pos": (None,),
+        "pool": {},
+        "state": {},
+    }
+    if cache.get("pool"):
+        nd = cache["pool"]["k"].ndim      # (L, P, T, KV, HD)
+        pool_ax = ("layers", "kv_pages", None, "kv_heads", None)[:nd]
+        axes["pool"] = {"k": pool_ax, "v": pool_ax}
+    if cache.get("state"):
+        axes["state"] = cache_logical_axes(cfg, cache["state"], False)
+    return axes

@@ -96,6 +96,14 @@ class ServeScheduler:
         self._next_cid = 0
         self.peak_bytes = 0
         self.n_evictions = 0
+        # Cumulative page flow: every page a slot pins is counted once in
+        # ``pages_allocated`` and credited back in ``pages_released`` when
+        # it frees -- INCLUDING compaction (``shrink_slots``), which used
+        # to release bytes silently without crediting the flow counters,
+        # so the engine's metrics could not reconcile against the pool.
+        # Invariant (property-tested): allocated - released == resident.
+        self.pages_allocated = 0
+        self.pages_released = 0
 
     # ------------------------------------------------------------- accounting
     def _cohort_bytes(self, c: _Cohort) -> int:
@@ -105,6 +113,20 @@ class ServeScheduler:
     @property
     def allocated_bytes(self) -> int:
         return sum(self._cohort_bytes(c) for c in self._cohorts.values())
+
+    @property
+    def allocated_pages(self) -> int:
+        """Resident pages across all live cohorts (slots x pages each)."""
+        return sum(c.pages_per_slot * c.slots for c in self._cohorts.values())
+
+    def assert_reconciled(self) -> None:
+        """Pool-accounting invariant: the cumulative flow counters must
+        reproduce the resident page count exactly."""
+        flow = self.pages_allocated - self.pages_released
+        assert flow == self.allocated_pages, (
+            f"page accounting leak: allocated {self.pages_allocated} - "
+            f"released {self.pages_released} = {flow} != resident "
+            f"{self.allocated_pages}")
 
     def _note_peak(self) -> None:
         self.peak_bytes = max(self.peak_bytes, self.allocated_bytes)
@@ -164,6 +186,7 @@ class ServeScheduler:
             self._next_cid += 1
             self._cohorts[cid] = _Cohort(cid=cid, reqs=batch,
                                          pages_per_slot=pages)
+            self.pages_allocated += pages * len(batch)
             admitted.append((cid, batch))
             self._note_peak()
         return admitted
@@ -179,6 +202,7 @@ class ServeScheduler:
             return True
         if self.allocated_bytes + delta > self.budget_bytes:
             return False
+        self.pages_allocated += (new_pages - c.pages_per_slot) * c.slots
         c.pages_per_slot = new_pages
         self._note_peak()
         return True
@@ -190,15 +214,21 @@ class ServeScheduler:
         c = self._cohorts[cid]
         c.done.add(rid)
         if len(c.done) == c.slots:
+            self.pages_released += c.pages_per_slot * c.slots
             del self._cohorts[cid]
             return True
         return False
 
     def shrink_slots(self, cid: int, keep_rids: List[int]) -> None:
         """Compact a cohort to ``keep_rids`` (engine sliced the batch dim);
-        the dropped slots' pages and state free immediately."""
+        the dropped slots' pages and state free immediately -- and are
+        credited back to the flow counters (the compaction accounting
+        fix: previously only ``allocated_bytes`` shrank, so the released
+        pages never showed up in any cumulative metric)."""
         c = self._cohorts[cid]
         keep = set(keep_rids)
+        dropped = sum(1 for r in c.reqs if r.rid not in keep)
+        self.pages_released += c.pages_per_slot * dropped
         c.reqs = [r for r in c.reqs if r.rid in keep]
         c.done = {rid for rid in c.done if rid in keep}
         if not c.reqs:
@@ -210,6 +240,7 @@ class ServeScheduler:
         return them (the engine re-prefills from scratch -- recompute
         preemption)."""
         c = self._cohorts.pop(cid)
+        self.pages_released += c.pages_per_slot * c.slots
         revived = [r for r in c.reqs if r.rid not in c.done]
         for r in reversed(revived):
             self.pending.appendleft(r)

@@ -56,6 +56,19 @@ class ServeSteps:
     max_len: int = 0                # cache token capacity at prefill
 
 
+@dataclass
+class PagedServeSteps:
+    """The paged engine's single decode program: per-slot positions, page
+    table gather, one jit bucket for the whole run (pool, table and slot
+    count are static shapes)."""
+
+    decode: Callable                # (params, paged_cache, batch) -> (logits, cache)
+    param_sharding: PyTree
+    cache_sharding: PyTree
+    model: Model
+    plan: Any = None
+
+
 def make_serve_steps(
     cfg: ModelConfig,
     shape: ShapeConfig,
@@ -170,3 +183,66 @@ def make_serve_steps(
     return ServeSteps(prefill=prefill_fn, decode=decode_fn,
                       param_sharding=p_shard, cache_sharding=c_shard,
                       model=model, plan=decode_plan, max_len=max_len)
+
+
+def make_paged_steps(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    cache_tpl: PyTree,
+    n_slots: int,
+    max_len: int,
+    dtype=jnp.bfloat16,
+    jit: bool = True,
+    decode_plan: Optional[Any] = None,
+    collectives: str = "gspmd",
+) -> PagedServeSteps:
+    """Lower the paged decode step (``Model.decode_step_paged``).
+
+    ``cache_tpl`` is the pooled cache pytree from
+    ``serve.pages.init_paged_cache`` (shapes only are read).  The plan's
+    KV head sharding applies to the pool exactly as it does to the dense
+    cache -- ``with_kv_sharding`` maps the pool's "kv_heads" axis and pins
+    the page dim ("kv_pages") unsharded, since a page is the VMEM
+    streaming granule of ONE chip.  Unlike the cohort factory there is
+    exactly one jit bucket: pool, table and slot count are static.
+    """
+    from repro.serve.pages import paged_cache_logical_axes
+
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    heads_divide = cfg.n_kv_heads % model_size == 0
+    kv_shard = decode_plan.kv_shard() if decode_plan is not None else 1
+    shape = ShapeConfig("paged", 1, n_slots, "decode")
+    rules = arch_rules(
+        cfg, mesh, state_bytes_per_param=2,
+        act_bytes=decode_footprint(cfg, shape, max_len) // mesh.size)
+    rules = with_batch_guard(rules, mesh, n_slots)
+    rules = resolve_collectives(rules, collectives)
+    rules = with_kv_sharding(rules, kv_shard if heads_divide else 1)
+    model = build_model(cfg, remat="none")
+    p_shard = param_shardings(mesh, rules, model.param_specs())
+
+    c_axes = paged_cache_logical_axes(cfg, cache_tpl)
+    c_shard = jax.tree.map(
+        lambda ax: NamedSharding(mesh, rules.act_spec(ax)),
+        c_axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x),
+    )
+    d_axes = batch_logical_axes(cfg, "decode")
+    d_shard = {k: NamedSharding(mesh, rules.act_spec(v))
+               for k, v in d_axes.items()}
+
+    def decode_fn(params, cache, batch):
+        with use_mesh_rules(mesh, rules):
+            return model.decode_step_paged(params, cache, batch, dtype=dtype)
+
+    if jit:
+        decode_fn = jax.jit(
+            decode_fn,
+            in_shardings=(p_shard, c_shard, d_shard),
+            out_shardings=(None, c_shard),
+            donate_argnums=(1,),
+        )
+    return PagedServeSteps(decode=decode_fn, param_sharding=p_shard,
+                           cache_sharding=c_shard, model=model,
+                           plan=decode_plan)

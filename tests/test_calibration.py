@@ -38,6 +38,44 @@ def test_write_calibration_folds_worst_cell(cal_env):
     assert set(data) >= {"llama3.2-1b", "qwen2-0.5b"}
 
 
+def test_act_scale_folds_and_applies(cal_env):
+    """The replicated (activation) term calibrates like ``overhead``:
+    ``write_calibration`` folds the worst ``act_ratio`` into ``act_scale``
+    and ``activation_footprint`` scales by it."""
+    from repro.configs import get_model_config, get_shape
+    from repro.launch.dryrun import write_calibration
+    from repro.launch.specs import activation_footprint
+
+    cfg = get_model_config("llama3.2-1b")
+    shape = get_shape("train_4k")
+    base = activation_footprint(cfg, shape, "full")   # no artifact: scale 1
+    write_calibration([
+        {"arch": "llama3.2-1b", "shape": "train_4k", "mesh": "16x16",
+         "calibration_ratio": 1.0, "overhead": 1.0,
+         "act_ratio": 0.5, "act_scale": 1.0},
+    ], path=str(cal_env))
+    data = json.loads(cal_env.read_text())
+    assert data["llama3.2-1b"]["act_scale"] == pytest.approx(2.0)
+    assert activation_footprint(cfg, shape, "full") == \
+        pytest.approx(2.0 * base, rel=0.01)
+    # A fit that says the model already covers the residual clamps at 1.0.
+    write_calibration([
+        {"arch": "qwen2-0.5b", "shape": "train_4k", "mesh": "16x16",
+         "calibration_ratio": 1.0, "overhead": 1.0,
+         "act_ratio": 3.0, "act_scale": 1.0},
+    ], path=str(cal_env))
+    data = json.loads(cal_env.read_text())
+    assert data["qwen2-0.5b"]["act_scale"] == 1.0
+    # A rerun with no train cells (serve shapes fit no activation term)
+    # carries the previously calibrated act_scale forward.
+    write_calibration([
+        {"arch": "llama3.2-1b", "shape": "decode_32k", "mesh": "16x16",
+         "calibration_ratio": 0.9, "overhead": 1.0},
+    ], path=str(cal_env))
+    data = json.loads(cal_env.read_text())
+    assert data["llama3.2-1b"]["act_scale"] == pytest.approx(2.0)
+
+
 def test_model_config_defaults_overhead_from_artifact(cal_env):
     from repro.configs import get_model_config
 

@@ -190,6 +190,84 @@ def test_model_ssd_chunked_matches_ref():
                                rtol=2e-4, atol=2e-4)
 
 
+# ---------------------------------------------------------------------------
+# paged attention (repro.serve.pages read side, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+def _paged_case(seed, s, h, kv, d, t, p_total, n_logical, max_len,
+                dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((s, h, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((p_total, t, kv, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((p_total, t, kv, d)), dtype)
+    table = jnp.asarray(rng.integers(1, p_total, (s, n_logical)), jnp.int32)
+    lengths = jnp.asarray(rng.integers(0, max_len + 1, (s,)), jnp.int32)
+    return q, k, v, table, lengths
+
+
+@pytest.mark.parametrize("window", [0, 6, 16])
+@pytest.mark.parametrize("s,h,kv,d,t", [(3, 4, 2, 16, 8), (2, 4, 4, 32, 16),
+                                        (4, 8, 2, 16, 8)])
+def test_paged_attention_matches_ref(s, h, kv, d, t, window):
+    from repro.kernels.paged_attention import paged_attention
+    from repro.kernels.ref import paged_attention_ref
+
+    n_logical = 3
+    q, k, v, table, lengths = _paged_case(
+        s * 31 + window, s, h, kv, d, t, p_total=7, n_logical=n_logical,
+        max_len=n_logical * t)
+    out = paged_attention(q, k, v, table, lengths, window=window,
+                          page_tokens=t)
+    ref = paged_attention_ref(q, k, v, table, lengths, window=window)
+    live = np.asarray(lengths) > 0      # empty slots: output is undefined
+    np.testing.assert_allclose(np.asarray(out)[live],
+                               np.asarray(ref, np.float32)[live],
+                               rtol=1e-4, atol=1e-4)
+    assert np.isfinite(np.asarray(out)).all()   # empty rows stay finite
+
+
+def test_paged_attention_matches_dense_gather():
+    """Gathering through a scrambled page table equals dense attention over
+    the same logical KV stream (per-row lengths as kv_len masks)."""
+    from repro.kernels.paged_attention import paged_attention
+    from repro.models.layers import grouped_attention
+
+    s, h, kv, d, t, n_logical = 3, 4, 2, 16, 8, 4
+    rng = np.random.default_rng(7)
+    kd = jnp.asarray(rng.standard_normal((s, n_logical * t, kv, d)),
+                     jnp.float32)
+    vd = jnp.asarray(rng.standard_normal((s, n_logical * t, kv, d)),
+                     jnp.float32)
+    q = jnp.asarray(rng.standard_normal((s, 1, h, d)), jnp.float32)
+    lengths = jnp.asarray([5, 17, 32], jnp.int32)
+    # Scatter each slot's stream into a scrambled pool.
+    perm = rng.permutation(np.arange(1, 1 + s * n_logical))
+    table = jnp.asarray(perm.reshape(s, n_logical), jnp.int32)
+    pool_k = jnp.zeros((1 + s * n_logical, t, kv, d), jnp.float32)
+    pool_v = jnp.zeros_like(pool_k)
+    pool_k = pool_k.at[table.reshape(-1)].set(
+        kd.reshape(s * n_logical, t, kv, d))
+    pool_v = pool_v.at[table.reshape(-1)].set(
+        vd.reshape(s * n_logical, t, kv, d))
+    out = paged_attention(q[:, 0], pool_k, pool_v, table, lengths,
+                          page_tokens=t)
+    # Dense reference: per-row q_pos = lengths - 1, per-row kv_len mask.
+    ref = grouped_attention(
+        q, kd, vd, (lengths - 1)[:, None], jnp.arange(n_logical * t),
+        causal=True, kv_len=lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref[:, 0]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_paged_attention_refuses_wrong_page_size():
+    from repro.kernels.paged_attention import paged_attention
+
+    q, k, v, table, lengths = _paged_case(0, 2, 4, 2, 16, 8, 5, 2, 16)
+    with pytest.raises(ValueError, match="planned page"):
+        paged_attention(q, k, v, table, lengths, page_tokens=16)
+
+
 def test_mlstm_chunkwise_matches_step():
     from repro.models.xlstm import mlstm_chunkwise, mlstm_step
 

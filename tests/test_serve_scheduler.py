@@ -25,6 +25,10 @@ def _check(sched: ServeScheduler) -> None:
         "resident KV exceeded the planned budget"
     assert sched.allocated_bytes == _recompute_allocated(sched)
     assert sched.peak_bytes <= sched.budget_bytes
+    # Pool-accounting invariant (ISSUE 5 satellite): the cumulative page
+    # flow reconciles with the resident count after EVERY op -- including
+    # compaction, which used to release bytes without crediting the flow.
+    sched.assert_reconciled()
 
 
 @settings(max_examples=40, deadline=None)
@@ -57,12 +61,21 @@ def test_resident_kv_never_exceeds_budget(seed, page_tokens, budget_pages):
             cid = rng.choice(running)
             cap = sched.capacity_tokens(cid) + page_tokens
             sched.reserve(cid, cap)     # may refuse; never overflows
-        elif op < 0.92 and running:
+        elif op < 0.88 and running:
             cid = rng.choice(running)
             c = sched._cohorts[cid]
             todo = [r.rid for r in c.reqs if r.rid not in c.done]
             if todo:
                 sched.finish(cid, rng.choice(todo))
+        elif op < 0.94 and running:
+            # Compaction: keep a random subset of the cohort's slots (the
+            # engine's growth-boundary ``_compact``); dropped slots' pages
+            # must be credited back to the flow counters.
+            cid = rng.choice(running)
+            c = sched._cohorts[cid]
+            keep = [r.rid for r in c.reqs
+                    if r.rid not in c.done or rng.random() < 0.4]
+            sched.shrink_slots(cid, keep)
         elif running:
             sched.evict(rng.choice(running))
         _check(sched)
@@ -111,3 +124,71 @@ def test_oversized_request_is_rejected_not_starved():
     else:
         raise AssertionError("oversized request was admitted")
     assert sched.allocated_bytes == 0 and BUDGET == sched.budget_bytes
+
+
+# ---------------------------------------------------------------------------
+# Paged slot scheduler (ISSUE 5): the page pool's free list, the slot
+# tables, and the cumulative flow counters must agree after every op.
+# ---------------------------------------------------------------------------
+
+
+def _check_paged(sched, pool) -> None:
+    assert pool.used_pages == sched.used_pages_by_slots(), \
+        "pool free list out of sync with the slot tables"
+    assert pool.pages_allocated - pool.pages_released == pool.used_pages, \
+        "page flow counters do not reconcile"
+    assert 0 <= pool.free_pages <= pool.pages_total - 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       page_tokens=st.sampled_from([8, 16]),
+       pool_pages=st.integers(min_value=3, max_value=24))
+def test_paged_pool_accounting_reconciles(seed, page_tokens, pool_pages):
+    from repro.serve.pages import PagePool, PagedScheduler
+
+    rng = random.Random(seed)
+    page = PageSpec(page_tokens=page_tokens, token_bytes=32)
+    pool = PagePool(pool_pages + 1)           # +1: the reserved null page
+    sched = PagedScheduler(pool, page, n_slots=rng.choice([1, 2, 4]),
+                           pages_per_slot=8)
+    rid = 0
+    for _ in range(rng.randint(10, 60)):
+        op = rng.random()
+        active = sched.active()
+        if op < 0.30:
+            sched.submit(Request(rid=rid,
+                                 prompt_len=rng.randint(1, page_tokens * 2),
+                                 max_new=rng.randint(1, 8)))
+            rid += 1
+        elif op < 0.55:
+            try:
+                for slot, req, ids in sched.admit():
+                    assert 0 not in ids       # null page never granted
+            except ValueError:
+                sched.pending.popleft()       # genuinely oversized head
+        elif op < 0.75 and active:
+            i = rng.choice(active)
+            s = sched.slots[i]
+            old_pos = s.pos
+            s.pos += rng.randint(1, page_tokens)
+            if not sched.ensure_capacity(i):
+                if not sched.table_full(i):
+                    v = sched.victim(i)
+                    if v is not None:
+                        sched.evict(v)
+                if not sched.ensure_capacity(i):
+                    s.pos = old_pos           # stalled: retry later
+            # The logical table bound is enforced, not just advisory.
+            assert len(s.pages) <= sched.pages_per_slot
+        elif op < 0.85 and active:
+            i = rng.choice(active)
+            sched.reclaim_window(i, window=rng.choice([8, 24]))
+        elif active:
+            sched.finish(rng.choice(active))
+        _check_paged(sched, pool)
+    for i in list(sched.active()):            # drain
+        sched.finish(i)
+        _check_paged(sched, pool)
+    assert pool.used_pages == 0
+    assert pool.pages_allocated == pool.pages_released
