@@ -475,6 +475,59 @@ def serve_bench(quick: bool) -> list:
     ]
 
 
+def tune_bench(quick: bool) -> list:
+    """--only tune: tuned-vs-analytic kernel times (DESIGN.md §9).
+
+    Runs the neighborhood sweep (``repro.tune.sweep``) around each kernel's
+    analytic block and reports the winner next to the analytic center --
+    the measured evidence behind every ``src=tuned`` line in the plan tree.
+    Winners are NOT persisted from a benchmark run (that is ``repro-tune``'s
+    job); this section only measures.
+    """
+    from repro.tune.sweep import run_sweeps
+
+    results = run_sweeps(quick=quick, warmup=1, iters=3 if quick else 5,
+                         write=False)
+    out = []
+    for r in results:
+        e = r.entry
+        if e is None:
+            out.append(f"tune_{r.kernel},0,no_timed_candidates=1")
+            continue
+        win = "/".join(f"{k}={v}" for k, v in sorted(e.block.items()))
+        ana = "/".join(f"{k}={v}"
+                       for k, v in sorted(e.analytic_block.items()))
+        out.append(
+            f"tune_{r.kernel},{e.median_us:.0f},"
+            f"analytic_us={e.analytic_us:.0f};speedup={e.speedup};"
+            f"winner={win};analytic={ana};bucket={r.bucket};"
+            f"candidates={len(r.candidates)};rejected={r.rejected};"
+            f"tuned_beats_analytic={e.speedup > 1.0}")
+    return out
+
+
+def tune_dry() -> list:
+    """--only tune --dry: enumerate + VMEM-filter the sweep neighborhoods
+    without timing anything -- the CI tune smoke gate (``ci/run_tests.sh``
+    greps ``all_candidates_fit_vmem=True``)."""
+    from repro.tune.sweep import run_sweeps
+
+    results = run_sweeps(quick=True, dry=True)
+    out = []
+    all_fit = True
+    for r in results:
+        fit = all(c.est_vmem_bytes <= r.budget_bytes for c in r.candidates)
+        all_fit &= fit and bool(r.candidates)
+        center = "/".join(f"{k}={v}" for k, v in sorted(r.center.items()))
+        out.append(
+            f"tune_dry_{r.kernel},0,bucket={r.bucket};center={center};"
+            f"candidates={len(r.candidates)};rejected={r.rejected};"
+            f"budget={r.budget_bytes};fit={fit}")
+    out.append(f"tune_dry_summary,0,kernels={len(results)};"
+               f"all_candidates_fit_vmem={all_fit}")
+    return out
+
+
 SECTIONS = {
     "table3": table3,
     "table4": table4,
@@ -487,6 +540,7 @@ SECTIONS = {
     "collectives": collectives_bench,
     "serve": serve_bench,
     "paged": paged_bench,
+    "tune": tune_bench,
 }
 
 
@@ -515,12 +569,85 @@ def dry(_quick: bool, collectives: str = "gspmd") -> list:
     return out
 
 
+def _parse_derived(derived: str) -> dict:
+    """``k=v;k=v`` -> dict with numbers parsed (best-effort; a token
+    without '=' keeps the raw string under ``_raw``)."""
+    out = {}
+    raw = []
+    for tok in derived.split(";"):
+        if "=" not in tok:
+            if tok:
+                raw.append(tok)
+            continue
+        k, _, v = tok.partition("=")
+        if v in ("True", "False"):
+            out[k] = v == "True"
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                try:
+                    out[k] = float(v)
+                except ValueError:
+                    out[k] = v
+    if raw:
+        out["_raw"] = ";".join(raw)
+    return out
+
+
+def _write_json(path: str, rows: list, argv: list) -> None:
+    """The committable ``BENCH_<n>.json`` artifact: every CSV row of the
+    run, parsed, plus enough provenance (backend, device, argv) to read a
+    number a year later.  Schema checked by the CI smoke."""
+    import json
+
+    backend = device = "unknown"
+    if "jax" in sys.modules:
+        try:
+            import jax
+
+            backend = jax.default_backend()
+            device = jax.devices()[0].device_kind
+        except Exception:
+            pass
+    doc = {
+        "schema": "repro-bench-v1",
+        "created_unix": int(time.time()),
+        "argv": argv,
+        "backend": backend,
+        "device": device,
+        "rows": [
+            {"section": sec, "name": name, "us_per_call": us,
+             "derived": _parse_derived(derived)}
+            for sec, name, us, derived in rows
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    print(f"# wrote {path} ({len(rows)} rows)", file=sys.stderr)
+
+
+def _collect(rows: list, section: str, line: str) -> None:
+    print(line)
+    name, _, rest = line.partition(",")
+    us, _, derived = rest.partition(",")
+    try:
+        us_f = float(us)
+    except ValueError:
+        us_f = 0.0
+    rows.append((section, name, us_f, derived))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="")
     ap.add_argument("--dry", action="store_true",
                     help="plan-only smoke run (CI): no timed benchmarks")
+    ap.add_argument("--json", default="",
+                    help="also write every row to a BENCH_<n>.json artifact "
+                         "(schema repro-bench-v1; the committable perf "
+                         "trajectory)")
     ap.add_argument("--collectives", default="gspmd",
                     choices=("gspmd", "ring", "serpentine"),
                     help="overlap-layer collective schedule (DESIGN.md §5): "
@@ -543,22 +670,27 @@ def main() -> None:
         # which only the section bodies perform).
         os.environ.setdefault(
             "XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+    rows: list = []
     if args.dry:
         # CI gate: unlike the benchmark sections below, failures here must
         # propagate to a nonzero exit, not become an _ERROR CSV row.
         print("name,us_per_call,derived")
         # Dedicated dry smokes (serve: decode plan tree + page/DCN
-        # assertions; paged: pool geometry vs the plan's page level) --
-        # any --only list made up entirely of these runs them in order.
-        dry_sections = {"serve": serve_dry, "paged": paged_dry}
+        # assertions; paged: pool geometry vs the plan's page level; tune:
+        # sweep enumeration + VMEM filter) -- any --only list made up
+        # entirely of these runs them in order.
+        dry_sections = {"serve": serve_dry, "paged": paged_dry,
+                        "tune": tune_dry}
         only = [s.strip() for s in args.only.split(",") if s.strip()]
         if only and all(s in dry_sections for s in only):
             for s in only:
                 for line in dry_sections[s]():
-                    print(line)
-            return
-        for line in dry(args.quick, args.collectives):
-            print(line)
+                    _collect(rows, s, line)
+        else:
+            for line in dry(args.quick, args.collectives):
+                _collect(rows, "dry", line)
+        if args.json:
+            _write_json(args.json, rows, sys.argv[1:])
         return
     names = args.only.split(",") if args.only else list(SECTIONS)
     print("name,us_per_call,derived")
@@ -567,10 +699,12 @@ def main() -> None:
         t0 = time.perf_counter()
         try:
             for line in fn(args.quick):
-                print(line)
+                _collect(rows, name.strip(), line)
         except Exception as e:  # keep the harness running
-            print(f"{name}_ERROR,0,{e!r}")
+            _collect(rows, name.strip(), f"{name}_ERROR,0,{e!r}")
         sys.stdout.flush()
+    if args.json:
+        _write_json(args.json, rows, sys.argv[1:])
 
 
 if __name__ == "__main__":

@@ -60,4 +60,33 @@ printf '%s\n' "$paged_out"
 printf '%s\n' "$paged_out" | grep -q 'pool_matches_plan=True' \
     || { echo "FAIL: paged pool geometry does not match page_plan"; exit 1; }
 
+echo "== smoke: tuning sweep (--dry: enumerate + VMEM filter) =="
+# The autotuning harness end to end on every run, without timing anything:
+# every swept candidate -- the analytic center and all its power-of-two
+# neighbors -- must pass the planner's own VMEM working-set filter
+# (DESIGN.md §9).
+tune_out="$(python -m benchmarks.run --only tune --dry)"
+printf '%s\n' "$tune_out"
+printf '%s\n' "$tune_out" | grep -q 'all_candidates_fit_vmem=True' \
+    || { echo "FAIL: a swept candidate exceeds the level budget"; exit 1; }
+
+echo "== smoke: BENCH json emitter (schema repro-bench-v1) =="
+# Every benchmark run must be able to write a committable perf artifact:
+# run the cheap dry sections through --json and check the schema keys.
+bench_json="$(mktemp /tmp/bench_ci_XXXX.json)"
+python -m benchmarks.run --dry --only serve,paged,tune --json "$bench_json" \
+    > /dev/null
+python - "$bench_json" <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+assert doc["schema"] == "repro-bench-v1", doc.get("schema")
+assert isinstance(doc["rows"], list) and doc["rows"], "no rows"
+for row in doc["rows"]:
+    assert set(row) == {"section", "name", "us_per_call", "derived"}, row
+    assert isinstance(row["derived"], dict), row
+assert {"created_unix", "argv", "backend", "device"} <= set(doc)
+print(f"BENCH json OK: {len(doc['rows'])} rows")
+EOF
+rm -f "$bench_json"
+
 echo "CI OK"

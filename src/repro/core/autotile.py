@@ -19,6 +19,7 @@ the perf log compare the two, mirroring the paper's §4 study.
 
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass
 from typing import Optional, Tuple
@@ -67,6 +68,7 @@ class MatmulTilePlan:
     np: int                     # the paper-search partition count that seeded it
     est_vmem_bytes: int
     strategy: str               # "cache_conscious" | "horizontal"
+    source: str = "analytic"    # "analytic" | "tuned" (measured sweep winner)
 
     @property
     def grid(self) -> Tuple[int, int, int]:
@@ -184,6 +186,55 @@ def _search_matmul_tiles(
     )
 
 
+def apply_tuned_matmul(
+    tile: MatmulTilePlan,
+    dtype_bytes: int,
+    spec: TPUSpec,
+    budget: int,
+) -> Tuple[MatmulTilePlan, Optional[dict]]:
+    """Replace an analytic tile plan's block extents with a matching sweep
+    winner from ``experiments/tuning.json`` (precedence analytic < tuned).
+
+    The tuned extents re-pass the exact invariants the analytic search
+    guarantees -- 8-alignment, clamped to the padded problem dims, the
+    ``_matmul_vmem_bytes`` working set within ``budget`` -- so a stale or
+    foreign entry can never produce a plan the analytic path could not.
+    Returns ``(plan, tuning_detail)`` where the detail carries the measured
+    provenance (or None when the analytic choice stands).
+    """
+    from repro.tune.cache import bucket_matmul, lookup_tuned
+
+    entry = lookup_tuned("matmul_cc", spec.name,
+                         bucket_matmul(tile.m, tile.k, tile.n, dtype_bytes))
+    if entry is None:
+        return tile, None
+    block = entry.get("block", {})
+    ext = [block.get(x) for x in ("bm", "bk", "bn")]
+    if not all(isinstance(v, int) and v >= 8 and v % 8 == 0 for v in ext):
+        return tile, None
+
+    def cap(v: int, dim: int) -> int:
+        unit = spec.mxu if dim > spec.mxu else 8
+        return min(v, _round_up(dim, unit))
+
+    bm = cap(ext[0], tile.m)
+    bk = cap(ext[1], tile.k)
+    bn = cap(ext[2], tile.n)
+    est = _matmul_vmem_bytes(bm, bk, bn, dtype_bytes)
+    if est > budget:
+        return tile, None
+    tuned = dataclasses.replace(tile, bm=bm, bk=bk, bn=bn,
+                                est_vmem_bytes=est, source="tuned")
+    detail = {
+        "speedup": entry.get("speedup", 1.0),
+        "median_us": entry.get("median_us", 0.0),
+        "analytic_us": entry.get("analytic_us", 0.0),
+        "analytic_block": entry.get("analytic_block", {}),
+        "fingerprint": entry.get("fingerprint", ""),
+    }
+    return tuned, detail
+
+
 def plan_matmul_cached(
     m: int,
     k: int,
@@ -233,6 +284,8 @@ class AttentionTilePlan:
     block_kv: int
     np: int
     est_vmem_bytes: int
+    source: str = "analytic"    # "analytic" | "tuned", "+clamped" suffix when
+                                # the kernel shrank a block to the sequence
 
     @property
     def grid(self) -> Tuple[int, int]:
@@ -258,11 +311,18 @@ def plan_attention(
     dtype_bytes: int = 2,
     spec: Optional[TPUSpec] = None,
     vmem_fraction: float = 1.0,
+    use_tuned: bool = True,
 ) -> AttentionTilePlan:
     """Decompose the KV sequence so one (K, V) partition plus the Q-side
     working set fits VMEM -- the paper's decomposition with the KV stream as
     the domain. block_q is then grown to the largest aligned extent that
-    keeps the step within budget (more MXU work per loaded KV block)."""
+    keeps the step within budget (more MXU work per loaded KV block).
+
+    With ``use_tuned`` (the default) a matching measured winner from
+    ``experiments/tuning.json`` overrides the analytic blocks -- precedence
+    analytic < tuned -- after re-passing this function's own VMEM filter;
+    any miss or invalid entry leaves the analytic choice standing.
+    """
     spec = spec or chip_spec()
     budget = int(spec.usable_vmem * vmem_fraction)
     sub = spec.sublane(dtype_bytes)
@@ -288,8 +348,58 @@ def plan_attention(
     while _attn_vmem_bytes(bq, block_kv, head_dim, dtype_bytes) > budget and block_kv > spec.lane:
         block_kv = _round_down(block_kv // 2, spec.lane)
 
-    return AttentionTilePlan(
+    plan = AttentionTilePlan(
         q_len=q_len, kv_len=kv_len, head_dim=head_dim,
         block_q=min(bq, _round_up(q_len, sub)), block_kv=block_kv, np=np_,
         est_vmem_bytes=_attn_vmem_bytes(bq, block_kv, head_dim, dtype_bytes),
     )
+    if use_tuned:
+        plan = _apply_tuned_attention(plan, dtype_bytes, spec, budget)
+    return plan
+
+
+def _apply_tuned_attention(plan: AttentionTilePlan, dtype_bytes: int,
+                           spec: TPUSpec, budget: int) -> AttentionTilePlan:
+    """Replace the analytic blocks with a matching sweep winner, keeping the
+    invariants the analytic path guarantees (sublane alignment, clamp to the
+    padded sequence, VMEM fit)."""
+    from repro.tune.cache import bucket_attention, lookup_tuned
+
+    entry = lookup_tuned(
+        "flash_attention", spec.name,
+        bucket_attention(plan.q_len, plan.kv_len, plan.head_dim,
+                         dtype_bytes))
+    if entry is None:
+        return plan
+    block = entry.get("block", {})
+    bq_t, bkv_t = block.get("block_q"), block.get("block_kv")
+    if not (isinstance(bq_t, int) and isinstance(bkv_t, int)
+            and bq_t >= 8 and bkv_t >= 8 and bq_t % 8 == 0
+            and bkv_t % 8 == 0):
+        return plan
+    sub = spec.sublane(dtype_bytes)
+    bq_t = min(bq_t, _round_up(plan.q_len, sub))
+    bkv_t = min(bkv_t, _round_up(plan.kv_len, sub))
+    est = _attn_vmem_bytes(bq_t, bkv_t, plan.head_dim, dtype_bytes)
+    if est > budget:
+        return plan
+    return dataclasses.replace(plan, block_q=bq_t, block_kv=bkv_t,
+                               est_vmem_bytes=est, source="tuned")
+
+
+def clamp_attention_plan(plan: AttentionTilePlan, q_len: int,
+                         kv_len: int,
+                         dtype_bytes: int = 2) -> AttentionTilePlan:
+    """The effective plan ``flash_attention`` runs: blocks shrunk to the
+    actual sequence (the kernel's ``max(8, min(block, seq))`` clamp).  When
+    the clamp changes the choice the returned plan records it -- ``source``
+    gains a ``+clamped`` suffix -- so sweeps and logs measure the block
+    actually executed, never the diverged paper choice."""
+    bq = max(8, min(plan.block_q, q_len))
+    bkv = max(8, min(plan.block_kv, kv_len))
+    if (bq, bkv) == (plan.block_q, plan.block_kv):
+        return plan
+    return dataclasses.replace(
+        plan, block_q=bq, block_kv=bkv,
+        est_vmem_bytes=_attn_vmem_bytes(bq, bkv, plan.head_dim, dtype_bytes),
+        source=plan.source + "+clamped")

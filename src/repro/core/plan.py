@@ -160,6 +160,8 @@ class PlanPolicy:
     order: str = "cc"
     vmem_fraction: float = 1.0
     spec: Optional[Any] = None          # hw.tpu.TPUSpec
+    use_tuned: bool = True              # consult experiments/tuning.json
+                                        # (precedence analytic < tuned)
 
 
 # ---------------------------------------------------------------------------
@@ -317,7 +319,8 @@ class HierarchicalPlan:
                     f"{t['bn']} np={lp.np} workers={lp.n_workers} "
                     f"vmem={_fmt(t['est_vmem_bytes'])}/"
                     f"{_fmt(lp.budget_bytes)} order={t['order']} "
-                    f"fits={lp.fits} phi={lp.phi}")
+                    f"fits={lp.fits} phi={lp.phi} "
+                    f"src={t.get('source', 'analytic')}")
             elif lp.kind == "page":
                 pg = lp.detail["page"]
                 lines.append(
@@ -325,7 +328,7 @@ class HierarchicalPlan:
                     f"page={_fmt(pg['page_bytes'])} x{pg['buffering']} "
                     f"kv_shard={pg['kv_shard']} np={lp.np} "
                     f"budget={_fmt(lp.budget_bytes)} fits={lp.fits} "
-                    f"phi={lp.phi}")
+                    f"phi={lp.phi} src={pg.get('source', 'analytic')}")
             elif lp.kind == "cache":
                 lines.append(
                     f"{ind}{lp.level}[cache] np={lp.np} "
@@ -505,6 +508,7 @@ def _plan_tile_level(level: MemoryLevel, workload: Workload,
     spec = policy.spec or _default_spec()
     m, k, n = workload.matmul
     budget = int(level.per_core_size() * policy.vmem_fraction)
+    tuning = None
     if policy.strategy == "horizontal":
         tile = autotile.plan_matmul_horizontal(
             m, k, n, dtype_bytes=workload.dtype_bytes,
@@ -513,6 +517,14 @@ def _plan_tile_level(level: MemoryLevel, workload: Workload,
         tile = autotile._search_matmul_tiles(
             m, k, n, workload.dtype_bytes, spec, policy.order,
             n_workers, budget)
+        if policy.use_tuned:
+            tile, tuning = autotile.apply_tuned_matmul(
+                tile, workload.dtype_bytes, spec, budget)
+    detail: Dict[str, Any] = {"tile": {f: getattr(tile, f) for f in (
+        "m", "k", "n", "bm", "bk", "bn", "order", "np",
+        "est_vmem_bytes", "strategy", "source")}}
+    if tuning is not None:
+        detail["tuning"] = tuning
     return LevelPlan(
         level=level.name, kind="tile", phi="phi_tpu",
         budget_bytes=budget,
@@ -521,9 +533,7 @@ def _plan_tile_level(level: MemoryLevel, workload: Workload,
         np_raw=tile.np, np=tile.np,
         partition_bytes=float(tile.est_vmem_bytes),
         fits=tile.est_vmem_bytes <= budget,
-        detail={"tile": {f: getattr(tile, f) for f in (
-            "m", "k", "n", "bm", "bk", "bn", "order", "np",
-            "est_vmem_bytes", "strategy")}},
+        detail=detail,
     )
 
 
@@ -571,6 +581,13 @@ def _plan_page_level(level: MemoryLevel, workload: Workload,
         np_raw, fits = -(-tokens // PAGE_ALIGN), False
     per_partition = -(-tokens // np_raw)
     page_tokens = -(-per_partition // PAGE_ALIGN) * PAGE_ALIGN
+    source = "analytic"
+    tuning = None
+    if policy.use_tuned and fits:
+        tuned_pt, tuning = _tuned_page_tokens(policy, tok_bytes, tokens,
+                                              budget)
+        if tuned_pt is not None:
+            page_tokens, source = tuned_pt, "tuned"
     page_bytes = page_tokens * tok_bytes
     n_pages = -(-tokens // page_tokens)
     # Pool geometry (the paged engine's bounds, DESIGN.md §8): one logical
@@ -598,12 +615,42 @@ def _plan_page_level(level: MemoryLevel, workload: Workload,
             "kv_shard": max(1, kv_shard),
             "align": PAGE_ALIGN,
             "buffering": PAGE_BUFFERING,
+            "source": source,
         }, "page_table": {
             "pages_per_slot": n_pages,
             "pages_total": int(pages_total),
             "slots_bound": int(pages_total // n_pages) if pages_total else 0,
-        }},
+        }, **({"tuning": tuning} if tuning is not None else {})},
     )
+
+
+def _tuned_page_tokens(policy: PlanPolicy, tok_bytes: int, tokens: int,
+                       budget: int) -> Tuple[Optional[int], Optional[dict]]:
+    """A measured ``page_tokens`` winner for this decode shape, re-checked
+    against the page level's own invariants (sublane alignment, the
+    double-buffered page within the leaf budget); ``(None, None)`` leaves
+    the analytic page standing."""
+    from repro.tune.cache import bucket_paged, lookup_tuned
+
+    spec = policy.spec or _default_spec()
+    entry = lookup_tuned("paged_attention", spec.name,
+                         bucket_paged(tok_bytes, tokens))
+    if entry is None:
+        return None, None
+    pt = entry.get("block", {}).get("page_tokens")
+    if not (isinstance(pt, int) and pt >= PAGE_ALIGN
+            and pt % PAGE_ALIGN == 0):
+        return None, None
+    pt = min(pt, -(-tokens // PAGE_ALIGN) * PAGE_ALIGN)
+    if PAGE_BUFFERING * pt * tok_bytes > budget:
+        return None, None
+    return pt, {
+        "speedup": entry.get("speedup", 1.0),
+        "median_us": entry.get("median_us", 0.0),
+        "analytic_us": entry.get("analytic_us", 0.0),
+        "analytic_block": entry.get("analytic_block", {}),
+        "fingerprint": entry.get("fingerprint", ""),
+    }
 
 
 def _plan_cache_level(level: MemoryLevel, workload: Workload,

@@ -22,7 +22,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.autotile import AttentionTilePlan, plan_attention
+from repro.core.autotile import (
+    AttentionTilePlan,
+    clamp_attention_plan,
+    plan_attention,
+)
 
 NEG_INF = -1e30
 
@@ -79,13 +83,19 @@ def flash_attention(
     causal: bool = True,
     plan: Optional[AttentionTilePlan] = None,
     interpret: Optional[bool] = None,
-) -> jax.Array:
+    return_plan: bool = False,
+):
+    """With ``return_plan`` the result is ``(out, effective_plan)`` where
+    the plan records the blocks the kernel actually ran -- when the
+    sequence forces a clamp below the plan's choice, ``source`` carries a
+    ``+clamped`` marker instead of diverging silently (tuning sweeps must
+    measure the executed block, not the requested one)."""
     b, h, sq, d = q.shape
     sk = k.shape[2]
     if plan is None:
         plan = plan_attention(sq, sk, d, dtype_bytes=q.dtype.itemsize)
-    bq = max(8, min(plan.block_q, sq))
-    bkv = max(8, min(plan.block_kv, sk))
+    plan = clamp_attention_plan(plan, sq, sk, dtype_bytes=q.dtype.itemsize)
+    bq, bkv = plan.block_q, plan.block_kv
 
     gq = -(-sq // bq)
     gkv = -(-sk // bkv)
@@ -128,4 +138,5 @@ def flash_attention(
         ) if not interpret else None,
         interpret=interpret,
     )(qp, kp, vp)
-    return out.reshape(b, h, gq * bq, d)[:, :, :sq]
+    out = out.reshape(b, h, gq * bq, d)[:, :, :sq]
+    return (out, plan) if return_plan else out

@@ -128,6 +128,27 @@ def paged_attention(
             f"the kernel block must be the planned page")
     if h % n_kv != 0:
         raise ValueError(f"{h} query heads do not group over {n_kv} KV heads")
+
+    # The gathered K/V block is (1, t, n_kv, d): n_kv is its sublane
+    # (second-minor) dim, and Mosaic tiles it in groups of 8.  A grouped-GQA
+    # head count that is not a sublane multiple must be padded explicitly --
+    # zero KV heads whose (also zero-padded) query heads are sliced off the
+    # output -- rather than relying on the shape happening to align.  The
+    # contraction batches over the KV-head dim, so padded heads never mix
+    # with real ones and real heads' outputs are bit-identical.
+    if n_kv % 8:
+        g = h // n_kv
+        kv_pad = -(-n_kv // 8) * 8
+        pad = kv_pad - n_kv
+        k_pages = jnp.pad(k_pages, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_pages = jnp.pad(v_pages, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        qg = jnp.pad(q.reshape(s, n_kv, g, d),
+                     ((0, 0), (0, pad), (0, 0), (0, 0)))
+        out = paged_attention(qg.reshape(s, kv_pad * g, d), k_pages,
+                              v_pages, page_table, lengths, window=window,
+                              page_tokens=page_tokens, interpret=interpret)
+        return out.reshape(s, kv_pad, g, d)[:, :n_kv].reshape(s, h, d)
+
     n_pages = page_table.shape[1]
     if interpret is None:
         interpret = jax.default_backend() != "tpu"

@@ -347,7 +347,11 @@ def write_calibration(records: list, path: str = None) -> str:
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="all")
-    ap.add_argument("--shape", default="all")
+    ap.add_argument("--shape", default="all",
+                    help="one shape, a comma-separated list, or 'all' "
+                         "(a --calibrate run must cover an arch's shapes "
+                         "in ONE invocation: write_calibration folds the "
+                         "worst cell per run)")
     ap.add_argument("--mesh", default="both",
                     choices=["single", "multi", "both"])
     ap.add_argument("--out", default=None)
@@ -368,7 +372,8 @@ def main() -> int:
 
     archs = list_archs() if args.arch == "all" else [args.arch]
     shapes = (["train_4k", "prefill_32k", "decode_32k", "long_500k"]
-              if args.shape == "all" else [args.shape])
+              if args.shape == "all"
+              else [s.strip() for s in args.shape.split(",") if s.strip()])
     meshes = {"single": [False], "multi": [True],
               "both": [False, True]}[args.mesh]
 

@@ -1,0 +1,81 @@
+"""``repro-tune`` -- run the empirical tuning sweeps end to end.
+
+``python -m repro.launch.tune [--quick] [--dry] [--kernels a,b] ...``
+(also installed as the ``repro-tune`` console script).  For each kernel the
+harness takes the planner's analytic block as the sweep center, enumerates
+the aligned power-of-two neighborhood, VMEM-filters it with the planner's
+own working-set model, times the survivors (warmup + ``block_until_ready``
+medians; Pallas interpret mode on CPU), and merges the winners into
+``experiments/tuning.json`` -- which the planner then consults with
+precedence analytic < tuned.
+
+``--dry`` stops after enumeration + filtering (no jax, no timing): the CI
+smoke asserts every candidate respects the level budget.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    from repro.tune.cache import hw_fingerprint, tuning_path
+    from repro.tune.sweep import SWEEPS, run_sweeps
+
+    ap = argparse.ArgumentParser(
+        prog="repro-tune",
+        description="neighborhood sweep around the plan's analytic tiles")
+    ap.add_argument("--kernels", default="all",
+                    help=f"comma-separated subset of {','.join(SWEEPS)} "
+                         f"or 'all'")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller stock workloads (CI-sized)")
+    ap.add_argument("--dry", action="store_true",
+                    help="enumerate + VMEM-filter only; no timing, no "
+                         "artifact write")
+    ap.add_argument("--warmup", type=int, default=2)
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--out", default=None,
+                    help="artifact path (default: the REPRO_TUNING env "
+                         "override, else experiments/tuning.json)")
+    ap.add_argument("--no-write", action="store_true",
+                    help="time the sweep but do not persist winners")
+    args = ap.parse_args(argv if argv is not None else sys.argv[1:])
+
+    kernels = (None if args.kernels == "all"
+               else [k.strip() for k in args.kernels.split(",") if k.strip()])
+    results = run_sweeps(kernels=kernels, quick=args.quick, dry=args.dry,
+                         warmup=args.warmup, iters=args.iters,
+                         out_path=args.out, write=not args.no_write)
+
+    all_fit = True
+    for r in results:
+        print(f"[tune] {r.kernel} bucket={r.bucket} center={r.center} "
+              f"candidates={len(r.candidates)} rejected={r.rejected} "
+              f"budget={r.budget_bytes}")
+        for c in sorted(r.candidates, key=lambda c: c.label):
+            fit_ok = c.est_vmem_bytes <= r.budget_bytes
+            all_fit &= fit_ok
+            tm = f"{c.median_us:10.1f}us" if c.median_us is not None else \
+                "      (dry)"
+            mark = " <- analytic" if c.block == r.center else ""
+            print(f"[tune]   {c.label:<40s} est={c.est_vmem_bytes:>10d} "
+                  f"{tm}{mark}")
+        if r.entry is not None:
+            e = r.entry
+            print(f"[tune]   winner {dict(e.block)} median={e.median_us}us "
+                  f"analytic={e.analytic_us}us speedup={e.speedup}x")
+    print(f"[tune] all_candidates_fit_vmem={all_fit}")
+    if args.dry:
+        print("[tune] dry run: nothing timed, nothing written")
+    elif args.no_write:
+        print("[tune] --no-write: winners not persisted")
+    else:
+        print(f"[tune] wrote {args.out or tuning_path()} "
+              f"(fingerprint {hw_fingerprint()})")
+    return 0 if all_fit else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -26,11 +26,25 @@ from repro.models.params import ParamSpec
 # Chunk selection (the paper's decomposition applied to the SSD time axis)
 # ---------------------------------------------------------------------------
 
+def ssd_workset_bytes(chunk: int, n_heads: int, head_dim: int,
+                      state_dim: int, dtype_bytes: int = 2) -> int:
+    """One SSD chunk step's VMEM working set (the phi_tpu accounting:
+    double-buffered inputs + f32 score tile + running state) -- the filter
+    both the analytic chunk choice and the tuning sweep apply."""
+    return (
+        chunk * chunk * 4                         # score tile (f32)
+        + 2 * chunk * head_dim * dtype_bytes * 2  # x, dt-scaled x
+        + 2 * chunk * state_dim * dtype_bytes * 2  # B, C rows
+        + head_dim * state_dim * 4                # running state
+    ) * n_heads
+
+
 def choose_chunk(seq_len: int, n_heads: int, head_dim: int, state_dim: int,
-                 dtype_bytes: int = 2, spec=None) -> int:
+                 dtype_bytes: int = 2, spec=None, use_tuned: bool = True) -> int:
     """Pick the largest power-of-two chunk whose SSD working set fits the
-    VMEM budget (per the phi_tpu accounting: double-buffered inputs + f32
-    score tile + state)."""
+    VMEM budget; with ``use_tuned`` a measured sweep winner from
+    ``experiments/tuning.json`` overrides it (precedence analytic < tuned)
+    after re-passing the same working-set filter."""
     from repro.hw import chip_spec
 
     spec = spec or chip_spec()
@@ -38,15 +52,23 @@ def choose_chunk(seq_len: int, n_heads: int, head_dim: int, state_dim: int,
     q = 64
     while q * 2 <= min(seq_len, 1024):
         nxt = q * 2
-        work = (
-            nxt * nxt * 4                       # score tile (f32)
-            + 2 * nxt * head_dim * dtype_bytes * 2   # x, dt-scaled x
-            + 2 * nxt * state_dim * dtype_bytes * 2  # B, C rows
-            + head_dim * state_dim * 4          # running state
-        ) * n_heads
-        if work > budget:
+        if ssd_workset_bytes(nxt, n_heads, head_dim, state_dim,
+                             dtype_bytes) > budget:
             break
         q = nxt
+    if use_tuned:
+        from repro.tune.cache import bucket_ssd, lookup_tuned
+
+        entry = lookup_tuned(
+            "ssd_scan", spec.name,
+            bucket_ssd(seq_len, n_heads, head_dim, state_dim, dtype_bytes))
+        if entry is not None:
+            c = entry.get("block", {}).get("chunk")
+            cap = -(-min(max(seq_len, 64), 1024) // 8) * 8
+            if (isinstance(c, int) and c >= 8 and c % 8 == 0 and c <= cap
+                    and ssd_workset_bytes(c, n_heads, head_dim, state_dim,
+                                          dtype_bytes) <= budget):
+                return c
     return q
 
 

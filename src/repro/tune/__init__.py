@@ -1,0 +1,50 @@
+"""``repro.tune`` -- empirical autotuning around the plan's analytic tiles.
+
+``repro.tune.cache`` is the persisted artifact (``experiments/tuning.json``)
+and its lookup API; ``repro.tune.sweep`` is the measurement harness.  The
+planner (``core.plan`` / ``core.autotile`` / ``models.mamba2``) consults the
+cache with precedence analytic < tuned; the ``repro-tune`` CLI
+(``repro.launch.tune``) runs the sweeps end to end.
+"""
+
+from repro.tune.cache import (
+    TUNING_ENV,
+    TuningEntry,
+    entry_key,
+    hw_fingerprint,
+    load_tuning,
+    lookup_tuned,
+    record_tuned,
+    tuning_path,
+)
+from repro.tune.sweep import (
+    Candidate,
+    SweepResult,
+    default_sweeps,
+    run_sweeps,
+    sweep_attention,
+    sweep_matmul,
+    sweep_paged,
+    sweep_ssd,
+    time_callable,
+)
+
+__all__ = [
+    "TUNING_ENV",
+    "TuningEntry",
+    "Candidate",
+    "SweepResult",
+    "default_sweeps",
+    "entry_key",
+    "hw_fingerprint",
+    "load_tuning",
+    "lookup_tuned",
+    "record_tuned",
+    "run_sweeps",
+    "sweep_attention",
+    "sweep_matmul",
+    "sweep_paged",
+    "sweep_ssd",
+    "time_callable",
+    "tuning_path",
+]

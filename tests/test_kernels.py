@@ -268,6 +268,56 @@ def test_paged_attention_refuses_wrong_page_size():
         paged_attention(q, k, v, table, lengths, page_tokens=16)
 
 
+@pytest.mark.parametrize("kv,group", [(3, 2), (5, 1), (6, 4)])
+def test_paged_attention_gqa_sublane_pad(kv, group):
+    """Grouped-GQA head counts that are not a sublane multiple (8) go
+    through the explicit zero-pad path: the K/V pool's head dim is padded
+    up to 8 and the padded heads sliced off, with outputs identical to the
+    reference (the padded heads never mix into real ones)."""
+    from repro.kernels.paged_attention import paged_attention
+    from repro.kernels.ref import paged_attention_ref
+
+    h = kv * group
+    s, d, t, n_logical = 3, 16, 8, 3
+    q, k, v, table, lengths = _paged_case(
+        kv * 11 + group, s, h, kv, d, t, p_total=7, n_logical=n_logical,
+        max_len=n_logical * t)
+    assert kv % 8 != 0     # the case under test
+    out = paged_attention(q, k, v, table, lengths, page_tokens=t)
+    ref = paged_attention_ref(q, k, v, table, lengths)
+    live = np.asarray(lengths) > 0
+    np.testing.assert_allclose(np.asarray(out)[live],
+                               np.asarray(ref, np.float32)[live],
+                               rtol=1e-4, atol=1e-4)
+    assert out.shape == (s, h, d)       # padded heads sliced back off
+
+
+def test_flash_attention_records_clamped_plan():
+    """When the sequence forces the kernel below the plan's block, the
+    effective plan comes back with the executed blocks and a ``+clamped``
+    provenance marker instead of diverging silently."""
+    from repro.core.autotile import plan_attention
+    from repro.kernels.flash_attention import flash_attention
+
+    b, h, sq, sk, d = 1, 2, 24, 24, 16
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.standard_normal((b, h, sq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, h, sk, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, h, sk, d)), jnp.float32)
+    plan = plan_attention(4096, 4096, d, dtype_bytes=4, use_tuned=False)
+    assert plan.block_q > sq            # the clamp must trigger
+    out, eff = flash_attention(q, k, v, plan=plan, return_plan=True)
+    assert (eff.block_q, eff.block_kv) == (sq, sk)
+    assert eff.source.endswith("+clamped")
+    # The clamp changes bookkeeping only, never the math.
+    out2 = flash_attention(q, k, v, plan=plan)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+    # No clamp -> the plan comes back untouched.
+    small = plan_attention(sq, sk, d, dtype_bytes=4, use_tuned=False)
+    _, eff2 = flash_attention(q, k, v, plan=small, return_plan=True)
+    assert not eff2.source.endswith("+clamped")
+
+
 def test_mlstm_chunkwise_matches_step():
     from repro.models.xlstm import mlstm_chunkwise, mlstm_step
 
