@@ -21,6 +21,10 @@ Prints ``name,us_per_call,derived`` CSV lines.
              vs the cohort baseline on a mixed-length trace; with --dry,
              the pool-geometry-matches-page_plan assertion CI greps
              (DESIGN.md §8)
+  prefill  -- TTFT + decode-stall A/B of chunked vs monolithic prefill
+             (a long prompt backfilling while a resident slot decodes);
+             with --dry, the chunk-equals-planned-page assertion CI
+             greps (DESIGN.md §10)
 
 Usage: ``python -m benchmarks.run [--quick] [--only table3,roofline]
                                   [--collectives gspmd|ring|serpentine]``
@@ -435,6 +439,110 @@ def paged_bench(quick: bool) -> list:
     return out
 
 
+def prefill_dry() -> list:
+    """--only prefill --dry: chunk geometry, no timing.
+
+    Runs one chunked-prefill request end to end and asserts every full
+    prefill chunk in the engine's interleave trace is EXACTLY the
+    planner's page (``plan.chunk_tokens()`` == ``page_plan()``'s
+    ``page_tokens`` -- the VMEM-fitting double-buffered KV slice, reused
+    as the prefill quantum, DESIGN.md §10).  CI greps
+    ``chunk_matches_page=True`` (``ci/run_tests.sh``).
+    """
+    import numpy as np
+    from repro.configs import get_model_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve import ServeEngine, ServePolicy
+
+    cfg = get_model_config("llama3.2-1b").reduced()
+    engine = ServeEngine(
+        cfg, make_host_mesh(),
+        policy=ServePolicy(max_new_tokens=2, max_slots=2, max_len=128,
+                           batching="paged", prefill="chunked"))
+    t = engine.plan.chunk_tokens()
+    page = engine.plan.page_plan()
+    rng = np.random.default_rng(0)
+    plen = 2 * (t or 16) + 3                 # multi-chunk, partial final
+    engine.generate([rng.integers(0, 256, plen, dtype=np.int32)])
+    chunks = [ev for ev in engine.metrics["interleave"]
+              if ev[0] == "chunk"]
+    full = [c for _, _, _, c in chunks if c == t]
+    ok = (
+        t is not None
+        and page is not None
+        and t == page["page_tokens"]
+        and len(chunks) == -(-plen // t)
+        and len(full) == plen // t
+        and sum(c for _, _, _, c in chunks) == plen
+    )
+    return [
+        f"prefill_dry_chunks,0,chunk_tokens={t};"
+        f"page_tokens={page['page_tokens'] if page else None};"
+        f"chunks={len(chunks)};prompt_tokens={plen};"
+        f"chunk_matches_page={ok}",
+    ]
+
+
+def prefill_bench(quick: bool) -> list:
+    """--only prefill: TTFT + decode-stall A/B, chunked vs monolithic.
+
+    One long prompt arrives while a short request is already decoding.
+    Monolithic prefill runs the whole prompt between two of the resident
+    slot's decode ticks -- its max inter-token gap absorbs the entire
+    prefill.  Chunked prefill pays one page-sized chunk per tick, so the
+    resident slot's worst stall is bounded by a chunk.  Reports the long
+    request's time-to-first-token and the short request's max inter-token
+    gap for both modes, from the engine's per-token timestamps.
+    """
+    import numpy as np
+    from repro.configs import get_model_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve import ServeEngine, ServePolicy
+
+    cfg = get_model_config("llama3.2-1b").reduced()
+    rng = np.random.default_rng(0)
+    out = []
+    results = {}
+    for mode in ("monolithic", "chunked"):
+        engine = ServeEngine(
+            cfg, make_host_mesh(),
+            policy=ServePolicy(max_slots=2, max_len=256, batching="paged",
+                               prefill=mode))
+        t = engine.plan.chunk_tokens() or engine.page.page_tokens
+        long_plen = (4 if quick else 6) * t
+        # Two short requests fill both slots; the long one backfills the
+        # early finisher's slot and prefills WHILE request 0 still decodes
+        # -- its inter-token gaps are where a monolithic prefill shows up.
+        prompts = [rng.integers(0, cfg.vocab_size, t - 2, dtype=np.int32),
+                   rng.integers(0, cfg.vocab_size, t - 2, dtype=np.int32),
+                   rng.integers(0, cfg.vocab_size, long_plen,
+                                dtype=np.int32)]
+        outs = engine.generate(
+            prompts, max_new_tokens=[12 if quick else 24, 2, 2])
+        m = engine.metrics
+        times = m["token_times"]
+        ttft_long = times[2][0] - m["start_time"]
+        gaps = np.diff(np.asarray([m["start_time"]] + times[0]))
+        results[mode] = (outs, ttft_long, float(gaps.max()))
+        n_tok = sum(len(o) for o in outs)
+        out.append(
+            f"prefill_ab_{mode},{ttft_long * 1e6:.0f},"
+            f"ttft_long_ms={ttft_long * 1e3:.1f};"
+            f"max_stall_short_ms={float(gaps.max()) * 1e3:.1f};"
+            f"tokens={n_tok};prefill_chunks={m['prefill_chunks']};"
+            f"chunk_tokens={t};long_prompt={long_plen}")
+    # Token identity chunked-vs-monolithic is the test suite's job
+    # (tests/test_serve_prefill.py, at controlled context lengths --
+    # random-init logits go argmax-unstable at this prompt scale).
+    out.append(
+        f"prefill_ab_summary,0,"
+        f"stall_mono_ms={results['monolithic'][2] * 1e3:.1f};"
+        f"stall_chunked_ms={results['chunked'][2] * 1e3:.1f};"
+        f"chunked_stall_lower="
+        f"{results['chunked'][2] < results['monolithic'][2]}")
+    return out
+
+
 def serve_bench(quick: bool) -> list:
     """--only serve: tok/s of the plan-driven engine on this host, next to
     the planned-vs-naive page sizes (naive = the legacy loop's allocation
@@ -540,6 +648,7 @@ SECTIONS = {
     "collectives": collectives_bench,
     "serve": serve_bench,
     "paged": paged_bench,
+    "prefill": prefill_bench,
     "tune": tune_bench,
 }
 
@@ -680,7 +789,7 @@ def main() -> None:
         # sweep enumeration + VMEM filter) -- any --only list made up
         # entirely of these runs them in order.
         dry_sections = {"serve": serve_dry, "paged": paged_dry,
-                        "tune": tune_dry}
+                        "prefill": prefill_dry, "tune": tune_dry}
         only = [s.strip() for s in args.only.split(",") if s.strip()]
         if only and all(s in dry_sections for s in only):
             for s in only:

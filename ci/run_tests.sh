@@ -60,6 +60,15 @@ printf '%s\n' "$paged_out"
 printf '%s\n' "$paged_out" | grep -q 'pool_matches_plan=True' \
     || { echo "FAIL: paged pool geometry does not match page_plan"; exit 1; }
 
+echo "== smoke: chunked prefill (chunk == planned page) =="
+# Chunked prefill end to end on every run: every full prefill chunk the
+# engine cuts must be exactly the planner's page -- the VMEM-fitting KV
+# slice doubles as the prefill quantum (DESIGN.md §10).
+prefill_out="$(python -m benchmarks.run --only prefill --dry)"
+printf '%s\n' "$prefill_out"
+printf '%s\n' "$prefill_out" | grep -q 'chunk_matches_page=True' \
+    || { echo "FAIL: prefill chunk does not match the planned page"; exit 1; }
+
 echo "== smoke: tuning sweep (--dry: enumerate + VMEM filter) =="
 # The autotuning harness end to end on every run, without timing anything:
 # every swept candidate -- the analytic center and all its power-of-two
@@ -74,7 +83,7 @@ echo "== smoke: BENCH json emitter (schema repro-bench-v1) =="
 # Every benchmark run must be able to write a committable perf artifact:
 # run the cheap dry sections through --json and check the schema keys.
 bench_json="$(mktemp /tmp/bench_ci_XXXX.json)"
-python -m benchmarks.run --dry --only serve,paged,tune --json "$bench_json" \
+python -m benchmarks.run --dry --only serve,paged,prefill,tune --json "$bench_json" \
     > /dev/null
 python - "$bench_json" <<'EOF'
 import json, sys

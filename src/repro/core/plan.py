@@ -266,6 +266,16 @@ class HierarchicalPlan:
                 return lp.detail.get("page_table")
         return None
 
+    def chunk_tokens(self) -> Optional[int]:
+        """The prefill CHUNK length -- the page level's ``page_tokens``
+        (None if no page level).  The page is, by construction, the
+        VMEM-fitting double-buffered slice of one sequence's KV stream,
+        so it is also the natural unit to decompose prefill *time* into:
+        the engine cuts prompts into chunks of this many tokens and
+        interleaves them with decode ticks."""
+        page = self.page_plan()
+        return int(page["page_tokens"]) if page else None
+
     def kv_shard(self) -> int:
         """The KV head sharding degree the innermost mesh level chose for a
         decode workload (1 when no mesh level carries one)."""

@@ -291,6 +291,7 @@ def default_rules(
         "mlp": "model",
         "experts": None,
         "state_heads": "model",
+        "state_inner": None,
         "vocab": "model",
         "layers": None,
     }
@@ -355,6 +356,21 @@ def arch_rules(
         n_state_heads = (cfg.ssm.expand * cfg.d_model) // max(1, cfg.ssm.head_dim)
         if n_state_heads % model_n != 0:
             ar["state_heads"] = None
+    if cfg.xlstm is not None and cfg.n_heads % model_n != 0:
+        # xLSTM state heads == n_heads (e.g. 4) -- far short of a 16-wide
+        # model axis.  Sub-axis sharding: drop the head axis and shard the
+        # per-head state inner dim instead (mLSTM's dh, sLSTM's d/H), iff
+        # BOTH divide the axis -- one rule covers every state leaf, and
+        # the matrix state C:(..., H, dh, dh) then splits on dim 3 where
+        # it used to fail pjit's divisibility check on dim 2.
+        from repro.models.xlstm import _round128
+
+        ar["state_heads"] = None
+        dh = _round128(cfg.xlstm.mlstm_proj_factor * cfg.d_model) \
+            // max(1, cfg.n_heads)
+        dhs = cfg.d_model // max(1, cfg.n_heads)
+        if dh % model_n == 0 and dhs % model_n == 0:
+            ar["state_inner"] = "model"
     if cfg.moe is not None:
         # Expert parallelism when the expert count fills the model axis
         # (dispatch stays shard-local per expert group); tensor-parallel

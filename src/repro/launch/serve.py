@@ -34,6 +34,7 @@ def main(argv=None) -> int:
     top_k = int(overrides.pop("top_k", "0"))
     seed = int(overrides.pop("seed", "0"))
     batching = overrides.pop("batching", "auto")
+    prefill = overrides.pop("prefill", "chunked")
 
     cfg = get_model_config(arch).reduced()
     sampling = SamplingConfig(kind=kind, temperature=temperature,
@@ -42,6 +43,9 @@ def main(argv=None) -> int:
     if batching not in ("cohort", "paged", "auto"):
         raise SystemExit(f"--batching must be cohort|paged|auto, "
                          f"got {batching!r}")
+    if prefill not in ("chunked", "monolithic"):
+        raise SystemExit(f"--prefill must be chunked|monolithic, "
+                         f"got {prefill!r}")
     # "auto" resolves inside ServeEngine against its own decode plan:
     # paged exactly when the plan exposes a page level and the family has
     # a per-slot decode path; ``--batching cohort`` keeps the PR 4 engine
@@ -50,7 +54,7 @@ def main(argv=None) -> int:
         cfg, make_host_mesh(),
         policy=ServePolicy(max_new_tokens=n_new, max_slots=max(1, batch),
                            max_len=prompt_len + n_new + 1,
-                           batching=batching,
+                           batching=batching, prefill=prefill,
                            sampling=sampling),
         dtype=jax.numpy.float32)
 
@@ -75,6 +79,7 @@ def main(argv=None) -> int:
     print(f"[serve] {n_tok} tokens in {dt:.2f}s ({n_tok / max(dt, 1e-9):.1f} "
           f"tok/s); cohorts={m['cohorts']} decode_steps={m['decode_steps']} "
           f"evictions={m['evictions']} "
+          f"prefill_chunks={m.get('prefill_chunks', 0)} "
           f"slot_utilization={m.get('slot_utilization', 0.0):.2f} "
           f"backfills={m.get('backfills', 0)} "
           f"peak_resident={m.get('peak_resident_bytes', 0)}B")

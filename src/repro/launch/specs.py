@@ -101,10 +101,16 @@ def cache_logical_axes(cfg: ModelConfig, cache: Any, long_context: bool) -> Any:
             return ("layers", "batch", seq_ax, None)
         if name == "conv":
             return ("layers", "batch", None, "mlp")
-        if name in ("ssm", "C"):
+        if name == "ssm":
             return ("layers", "batch", "state_heads", None, None)
+        if name == "C":
+            # mLSTM matrix state (L, B, H, dh, dh): few state heads (H =
+            # n_heads, e.g. 4) rarely fill the model axis, so the rules may
+            # move TP to the per-head state dim instead ("state_inner" --
+            # sub-axis sharding, see dist.sharding.arch_rules).
+            return ("layers", "batch", "state_heads", "state_inner", None)
         if name in ("n", "c", "h", "m"):
-            return (("layers", "batch", "state_heads", None)[:nd])
+            return (("layers", "batch", "state_heads", "state_inner")[:nd])
         if name in ("len",):
             return (None,) * nd
         if name == "pos":

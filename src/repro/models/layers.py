@@ -537,6 +537,67 @@ def paged_attention_block(
     return out, k_pool, v_pool
 
 
+def paged_prefill_block(
+    params: dict,
+    x: jax.Array,                  # (1, C, d) -- one prompt chunk
+    positions: jax.Array,          # (C,) absolute positions of the chunk
+    cfg: ModelConfig,
+    k_pool: jax.Array,             # (L, P, T, KV, D) page pool
+    v_pool: jax.Array,
+    layer,                         # layer index into the pool (int or traced)
+    table_row: jax.Array,          # (NP,) int32 -- ONE slot's page table
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One prompt chunk's attention, KV written straight into pool pages.
+
+    The chunked-prefill sibling of ``paged_attention_block``: a CHUNK of
+    one slot's prompt (exact length, no padding -- the partial final
+    chunk is its own jit bucket) projects q/k/v, ropes at its absolute
+    ``positions``, scatters K/V through the slot's ``table_row`` (page
+    ``positions // T`` at offset ``positions % T`` -- the pages the
+    scheduler allocated ahead of the chunk front), and attends causally
+    over everything written so far by treating each query token as a
+    decode row of length ``position + 1`` in the Pallas paged kernel.
+    Zero post-prefill copies: the pages ARE the prefill destination.
+    Returns ``(out (1, C, d), k_pool, v_pool)``.
+    """
+    from repro.kernels.paged_attention import paged_attention
+
+    b, c, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q, k, v = fused_column_matmul(x, (params["wq"].astype(x.dtype),
+                                      params["wk"].astype(x.dtype),
+                                      params["wv"].astype(x.dtype)))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = q.reshape(b, c, h, hd)
+    k = k.reshape(b, c, kv, hd)
+    v = v.reshape(b, c, kv, hd)
+    q = apply_rope(q, positions[None, :], cfg.rope_theta)
+    k = apply_rope(k, positions[None, :], cfg.rope_theta)
+
+    t = k_pool.shape[2]
+    page_slot = positions // t
+    n_logical = table_row.shape[0]
+    page_ids = table_row[jnp.minimum(page_slot, n_logical - 1)]
+    page_ids = jnp.where(page_slot < n_logical, page_ids, 0)
+    off = positions % t
+    k_pool = k_pool.at[layer, page_ids, off].set(k[0].astype(k_pool.dtype))
+    v_pool = v_pool.at[layer, page_ids, off].set(v[0].astype(v_pool.dtype))
+
+    # Each chunk token is a "decode row" over the same table with its own
+    # causal length -- the paged kernel's per-row kv_len mask does the
+    # intra-chunk causal masking for free.
+    table = jnp.broadcast_to(table_row[None, :], (c, n_logical))
+    out = paged_attention(q[0], k_pool[layer], v_pool[layer], table,
+                          positions + 1, window=cfg.sliding_window or 0,
+                          page_tokens=t)
+    out = tp_matmul(out.reshape(b, c, h * hd),
+                    params["wo"].astype(x.dtype), "row")
+    return out, k_pool, v_pool
+
+
 # ---------------------------------------------------------------------------
 # FFN
 # ---------------------------------------------------------------------------

@@ -123,3 +123,121 @@ def mla_attention(
 
     y = jnp.einsum("bqhe,hed->bqd", out, params["wo"].astype(x.dtype))
     return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged MLA: the latent cache lives in the page pool
+# ---------------------------------------------------------------------------
+#
+# One pooled buffer ``lat`` of shape (L, P, T, 1, R + dr) stores, per token,
+# concat(rms_norm(ckv), roped k_rope) -- the exact absorbed-form cache row.
+# The Pallas paged kernel is reused UNCHANGED by two observations:
+#
+#   * logits  = q_lat @ ckv + q_rope @ k_rope = concat(q_lat, q_rope) @ lat,
+#     so passing the lat pool as ``k_pages`` with query concat(q_lat, q_rope)
+#     computes MLA logits.  The kernel scales by 1/sqrt(R + dr) internally
+#     where MLA wants 1/sqrt(nope + rope); the query is pre-scaled by the
+#     ratio to compensate.
+#   * out = probs @ ckv is the first R columns of probs @ lat, so passing
+#     the SAME pool as ``v_pages`` and slicing ``[..., :R]`` recovers the
+#     latent output (the discarded tail is probs @ k_rope -- never needed).
+#
+# The single shared latent acts as one KV head (kv = 1); the kernel's
+# sublane zero-padding handles n_kv % 8 != 0.
+
+
+def _mla_latent_row(params, x, positions, cfg):
+    """Project ``x`` to its latent-cache rows and absorbed queries.
+
+    positions: broadcastable to (B, S).  Returns
+    (q_cat (B,S,H,R+dr) pre-scaled for the paged kernel, lat (B,S,R+dr)).
+    """
+    m = cfg.mla
+    q_nope, q_rope = _project_q(params, x, cfg)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    q_lat = jnp.einsum("bqhe,rhe->bqhr", q_nope, params["wk_b"].astype(x.dtype))
+
+    kv = x @ params["wkv_a"].astype(x.dtype)
+    ckv = rms_norm(kv[..., : m.kv_lora_rank], params["kv_norm"], cfg.norm_eps)
+    k_rope = kv[..., m.kv_lora_rank:][:, :, None, :]
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
+
+    lat_dim = m.kv_lora_rank + m.rope_head_dim
+    ratio = math.sqrt(lat_dim) / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+    q_cat = jnp.concatenate([q_lat, q_rope], axis=-1) * ratio
+    lat = jnp.concatenate([ckv, k_rope], axis=-1)       # (B,S,R+dr)
+    return q_cat, lat
+
+
+def _mla_out(params, o_lat, x_dtype):
+    """Latent kernel output (…,H,R) -> d_model via wv_b then wo."""
+    out = jnp.einsum("bqhr,rhe->bqhe", o_lat,
+                     params["wv_b"].astype(x_dtype))
+    return jnp.einsum("bqhe,hed->bqd", out, params["wo"].astype(x_dtype))
+
+
+def paged_mla_attention_block(
+    params: dict,
+    x: jax.Array,                  # (S, 1, d) -- one decode token per slot
+    pos: jax.Array,                # (S,) per-slot absolute position
+    cfg: ModelConfig,
+    lat_pool: jax.Array,           # (L, P, T, 1, R+dr) latent page pool
+    layer,
+    table: jax.Array,              # (S, NP) int32 page table
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-slot absorbed-form MLA decode against the latent page pool."""
+    from repro.kernels.paged_attention import paged_attention
+
+    m = cfg.mla
+    b, s, d = x.shape
+    q_cat, lat = _mla_latent_row(params, x, pos[:, None], cfg)
+
+    t = lat_pool.shape[2]
+    page_slot = pos // t
+    n_logical = table.shape[1]
+    page_ids = jnp.take_along_axis(
+        table, jnp.minimum(page_slot, n_logical - 1)[:, None], axis=1)[:, 0]
+    page_ids = jnp.where(page_slot < n_logical, page_ids, 0)
+    off = pos % t
+    lat_pool = lat_pool.at[layer, page_ids, off].set(
+        lat[:, 0, None, :].astype(lat_pool.dtype))
+
+    o_lat = paged_attention(q_cat[:, 0], lat_pool[layer], lat_pool[layer],
+                            table, pos + 1, window=cfg.sliding_window or 0,
+                            page_tokens=t)[..., : m.kv_lora_rank]
+    y = _mla_out(params, o_lat[:, None], x.dtype)
+    return y, lat_pool
+
+
+def paged_mla_prefill_block(
+    params: dict,
+    x: jax.Array,                  # (1, C, d) -- one prompt chunk
+    positions: jax.Array,          # (C,)
+    cfg: ModelConfig,
+    lat_pool: jax.Array,           # (L, P, T, 1, R+dr)
+    layer,
+    table_row: jax.Array,          # (NP,) int32 -- ONE slot's page table
+) -> Tuple[jax.Array, jax.Array]:
+    """One prompt chunk's MLA attention, latent rows written into pages."""
+    from repro.kernels.paged_attention import paged_attention
+
+    m = cfg.mla
+    b, c, d = x.shape
+    q_cat, lat = _mla_latent_row(params, x, positions[None, :], cfg)
+
+    t = lat_pool.shape[2]
+    page_slot = positions // t
+    n_logical = table_row.shape[0]
+    page_ids = table_row[jnp.minimum(page_slot, n_logical - 1)]
+    page_ids = jnp.where(page_slot < n_logical, page_ids, 0)
+    off = positions % t
+    lat_pool = lat_pool.at[layer, page_ids, off].set(
+        lat[0, :, None, :].astype(lat_pool.dtype))
+
+    table = jnp.broadcast_to(table_row[None, :], (c, n_logical))
+    o_lat = paged_attention(q_cat[0], lat_pool[layer], lat_pool[layer],
+                            table, positions + 1,
+                            window=cfg.sliding_window or 0,
+                            page_tokens=t)[..., : m.kv_lora_rank]
+    y = _mla_out(params, o_lat[None], x.dtype)
+    return y, lat_pool

@@ -69,18 +69,26 @@ def _tf_layer(
     x: jax.Array,
     cfg: ModelConfig,
     kind: str,
-    q_pos: jax.Array,
-    cache: Optional[dict],
-    positions_3d: Optional[jax.Array],
+    attn,
     capacity_factor: float,
-) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+) -> Tuple[jax.Array, Any, jax.Array]:
+    """ONE decoder-layer body for every execution mode (the ROADMAP's
+    de-forked layer): pre-norm attention + residual, pre-norm FFN +
+    residual.
+
+    ``attn(lp["attn"], h) -> (attn_out, new_kv)`` is the mode-specific
+    attention hook -- cached cohort/prefill attention (``_cached_attn``),
+    the per-slot paged decode gather (``_paged_attn``), or the
+    chunked-prefill page writer (``_chunk_attn``) -- and ``new_kv`` is
+    whatever cache state the hook threads (None for stateless modes).
+    ``kind`` picks the FFN only: "moe"/"mla" route through ``moe_ffn``,
+    everything else SwiGLU.  Every step resolves this module global at
+    call time, so a layer change lands in cohort, paged, and
+    prefill-chunk paths at once -- and the unified-body regression test
+    counts calls by monkeypatching it.
+    """
     h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
-    if kind == "mla":
-        a, new_cache = MLA.mla_attention(lp["attn"], h, q_pos, cfg, cache)
-    else:
-        a, new_cache = L.attention_block(
-            lp["attn"], h, q_pos, q_pos, cfg, cache, positions_3d
-        )
+    a, new_kv = attn(lp["attn"], h)
     x = constrain(x + a, ("batch", "seq", "embed"))
     h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
     aux = jnp.zeros((), jnp.float32)
@@ -89,7 +97,78 @@ def _tf_layer(
     else:
         f = L.swiglu_ffn(lp["ffn"], h)
     x = constrain(x + f, ("batch", "seq", "embed"))
-    return x, new_cache, aux
+    return x, new_kv, aux
+
+
+def _cached_attn(cfg: ModelConfig, attn_kind: str, q_pos, cache,
+                 positions_3d=None, causal: bool = True):
+    """Attention hook: the cohort/prefill modes' family cache semantics
+    (full KV, sliding-window ring, MLA latent) with batch-shared
+    positions.  ``attn_kind`` "mla" routes to the latent-attention block;
+    anything else is the GQA block."""
+    if attn_kind == "mla":
+        return lambda ap, h: MLA.mla_attention(ap, h, q_pos, cfg, cache)
+    return lambda ap, h: L.attention_block(
+        ap, h, q_pos, q_pos, cfg, cache, positions_3d, causal=causal)
+
+
+def _paged_attn(cfg: ModelConfig, attn_kind: str, pos, table, layer,
+                *pools):
+    """Attention hook: per-slot paged decode against the page pool.
+    ``new_kv`` is the updated pool tuple the scan carry threads."""
+    if attn_kind == "mla":
+        (lat,) = pools
+
+        def hook(ap, h):
+            a, nlat = MLA.paged_mla_attention_block(
+                ap, h, pos, cfg, lat, layer, table)
+            return a, (nlat,)
+        return hook
+    kp, vp = pools
+
+    def hook(ap, h):
+        a, nkp, nvp = L.paged_attention_block(
+            ap, h, pos, cfg, kp, vp, layer, table)
+        return a, (nkp, nvp)
+    return hook
+
+
+def _chunk_attn(cfg: ModelConfig, attn_kind: str, positions, table_row,
+                layer, *pools):
+    """Attention hook: one page-sized prefill chunk written directly into
+    the slot's pool pages (the tentpole's zero-copy prefill path)."""
+    if attn_kind == "mla":
+        (lat,) = pools
+
+        def hook(ap, h):
+            a, nlat = MLA.paged_mla_prefill_block(
+                ap, h, positions, cfg, lat, layer, table_row)
+            return a, (nlat,)
+        return hook
+    kp, vp = pools
+
+    def hook(ap, h):
+        a, nkp, nvp = L.paged_prefill_block(
+            ap, h, positions, cfg, kp, vp, layer, table_row)
+        return a, (nkp, nvp)
+    return hook
+
+
+def _dec_layer(lp: dict, x: jax.Array, cfg: ModelConfig, self_attn,
+               cross_attn) -> Tuple[jax.Array, Any]:
+    """The enc-dec decoder-layer body, shared by training, prefill,
+    cohort decode, chunked prefill, and paged decode: pre-norm
+    self-attention, pre-norm cross-attention, pre-norm FFN.  Both hooks
+    follow the ``_tf_layer`` convention; only ``self_attn`` carries
+    cache state."""
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    a, new_kv = self_attn(lp["attn"], h)
+    x = constrain(x + a, ("batch", "seq", "embed"))
+    h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    x = constrain(x + cross_attn(lp["cross"], h), ("batch", "seq", "embed"))
+    h = L.rms_norm(x, lp["ln3"], cfg.norm_eps)
+    x = constrain(x + L.swiglu_ffn(lp["ffn"], h), ("batch", "seq", "embed"))
+    return x, new_kv
 
 
 # ---------------------------------------------------------------------------
@@ -204,11 +283,11 @@ class Model:
                     "moe": "moe", "mla_moe": "mla"}[fam]
             if fam == "mla_moe" and cfg.moe.first_k_dense:
                 def dense_body(lp, x):
-                    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
-                    a, _ = MLA.mla_attention(lp["attn"], h, q_pos, cfg, None)
-                    x = x + a
-                    h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
-                    return x + L.swiglu_ffn(lp["ffn"], h)
+                    y, _, _ = _tf_layer(
+                        lp, x, cfg, "dense",
+                        _cached_attn(cfg, "mla", q_pos, None),
+                        self.capacity_factor)
+                    return y
                 body = self._maybe_remat(dense_body)
 
                 def dscan(x, lp):
@@ -216,8 +295,10 @@ class Model:
                 x, _ = jax.lax.scan(dscan, x, params["dense_layers"])
 
             def layer_body(lp, x):
-                y, _, aux = _tf_layer(lp, x, cfg, kind, q_pos, None, pos3d,
-                                      self.capacity_factor)
+                y, _, aux = _tf_layer(
+                    lp, x, cfg, kind,
+                    _cached_attn(cfg, kind, q_pos, None, pos3d),
+                    self.capacity_factor)
                 return y, aux
             body = self._maybe_remat(layer_body)
 
@@ -291,13 +372,11 @@ class Model:
         return x, aux, new_caches
 
     def _shared_attn(self, ap, x, q_pos, cache):
-        cfg = self.cfg
-        h = L.rms_norm(x, ap["ln1"], cfg.norm_eps)
-        a, new_cache = L.attention_block(ap["attn"], h, q_pos, q_pos, cfg, cache)
-        x = x + a
-        h = L.rms_norm(x, ap["ln2"], cfg.norm_eps)
-        x = x + L.swiglu_ffn(ap["ffn"], h)
-        return x, new_cache
+        y, new_cache, _ = _tf_layer(
+            ap, x, self.cfg, "dense",
+            _cached_attn(self.cfg, "dense", q_pos, cache),
+            self.capacity_factor)
+        return y, new_cache
 
     # xLSTM: periods of (slstm_every - 1) mLSTM + 1 sLSTM.
     def _xlstm_stack(self, params, x, caches):
@@ -355,39 +434,59 @@ class Model:
             }
         return x, new_caches
 
-    def _forward_encdec(self, params, batch, dtype):
+    def _encode(self, params, enc_embeds, dtype):
+        """Run the encoder stack (shared by training forward, monolithic
+        prefill, and the paged engine's admission-time encode).  The
+        encoder layer IS ``_tf_layer`` with a non-causal hook.  Returns
+        the final-normed encoder output ``(B, Se, d)``."""
         cfg = self.cfg
-        enc = batch["enc_embeds"].astype(dtype)
-        se = enc.shape[1]
-        enc_pos = jnp.arange(se)
+        enc = enc_embeds.astype(dtype)
+        enc_pos = jnp.arange(enc.shape[1])
 
         def enc_body(lp, x):
-            h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
-            a, _ = L.attention_block(lp["attn"], h, enc_pos, enc_pos, cfg,
-                                     causal=False)
-            x = x + a
-            h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
-            return x + L.swiglu_ffn(lp["ffn"], h)
+            y, _, _ = _tf_layer(
+                lp, x, cfg, "dense",
+                _cached_attn(cfg, "dense", enc_pos, None, causal=False),
+                self.capacity_factor)
+            return y
         enc_body = self._maybe_remat(enc_body)
 
         def escan(x, lp):
             return enc_body(lp, x), None
         enc, _ = jax.lax.scan(escan, enc, params["enc_layers"])
-        enc = L.rms_norm(enc, params["enc_final_norm"], cfg.norm_eps)
+        return L.rms_norm(enc, params["enc_final_norm"], cfg.norm_eps)
+
+    def cross_kv(self, params, enc) -> Tuple[jax.Array, jax.Array]:
+        """Per-decoder-layer cross K/V from the encoder output:
+        ``(nd, B, Se, KV, HD)`` each.  Computed once per request (the
+        cross cache never grows) -- both prefill paths and the paged
+        engine's admission install consume this."""
+        cfg = self.cfg
+        b, se = enc.shape[0], enc.shape[1]
+        kv, hd = cfg.n_kv_heads, cfg.head_dim
+
+        def one(cp):
+            k = (enc @ cp["wk"].astype(enc.dtype)).reshape(b, se, kv, hd)
+            v = (enc @ cp["wv"].astype(enc.dtype)).reshape(b, se, kv, hd)
+            return k, v
+        return jax.vmap(one)(
+            jax.tree.map(lambda a: a, params["dec_layers"]["cross"]))
+
+    def _forward_encdec(self, params, batch, dtype):
+        cfg = self.cfg
+        enc = self._encode(params, batch["enc_embeds"], dtype)
+        enc_pos = jnp.arange(enc.shape[1])
 
         x = L.embed_tokens(params, batch["tokens"], dtype)
         sd = x.shape[1]
         dec_pos = jnp.arange(sd)
 
         def dec_body(lp, x):
-            h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
-            a, _ = L.attention_block(lp["attn"], h, dec_pos, dec_pos, cfg)
-            x = x + a
-            h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
-            c = self._cross_attn(lp["cross"], h, enc, dec_pos, enc_pos)
-            x = x + c
-            h = L.rms_norm(x, lp["ln3"], cfg.norm_eps)
-            return x + L.swiglu_ffn(lp["ffn"], h)
+            y, _ = _dec_layer(
+                lp, x, cfg,
+                _cached_attn(cfg, "dense", dec_pos, None),
+                lambda cp, h: self._cross_attn(cp, h, enc, dec_pos, enc_pos))
+            return y
         dec_body = self._maybe_remat(dec_body)
 
         def dscan(x, lp):
@@ -396,8 +495,11 @@ class Model:
         logits = L.lm_logits(params, x, cfg)
         return logits, jnp.zeros((), jnp.float32)
 
-    def _cross_attn(self, cp, x, enc, q_pos, k_pos, kv=None):
-        """Cross attention; ``kv`` overrides (pre-projected cache).
+    def _cross_attn(self, cp, x, enc, q_pos, k_pos, kv=None, kv_len=None):
+        """Cross attention; ``kv`` overrides (pre-projected cache) and
+        ``kv_len`` masks past the valid encoder length (scalar or per-row
+        vector -- the paged engine packs slots with different enc lengths
+        into one batch).
 
         Projections go through ``tp_matmul`` so the overlap layer's
         ring/serpentine collectives apply here too (DESIGN.md §5)."""
@@ -413,7 +515,7 @@ class Model:
         else:
             k, v = kv
         out = L.attention_op(q, k.astype(x.dtype), v.astype(x.dtype),
-                             q_pos, k_pos, cfg, causal=False)
+                             q_pos, k_pos, cfg, causal=False, kv_len=kv_len)
         return L.tp_matmul(out.reshape(b, s, h * hd), cp["wo"].astype(x.dtype), "row")
 
     # --------------------------------------------------------------- loss
@@ -542,11 +644,10 @@ class Model:
                     # the carry: no read-after-write hazard on the carry,
                     # so XLA updates it in place without a per-step copy.
                     c = jax.tree.map(lambda a: a[i], cache["dense_layers"])
-                    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
-                    a, nc = MLA.mla_attention(lp["attn"], h, q_pos, cfg, c)
-                    y = x + a
-                    h = L.rms_norm(y, lp["ln2"], cfg.norm_eps)
-                    y = y + L.swiglu_ffn(lp["ffn"], h)
+                    y, nc, _ = _tf_layer(
+                        lp, x, cfg, "dense",
+                        _cached_attn(cfg, "mla", q_pos, c),
+                        self.capacity_factor)
                     cstack = _cache_update(cstack, nc, i)
                     return (y, cstack), None
                 kd = cfg.moe.first_k_dense
@@ -558,8 +659,10 @@ class Model:
                 x, cstack = carry
                 lp, i = inp
                 c = jax.tree.map(lambda a: a[i], cache["layers"])  # invariant read
-                y, nc, _aux = _tf_layer(lp, x, cfg, kind, q_pos, c,
-                                        pos3d, self.capacity_factor)
+                y, nc, _aux = _tf_layer(
+                    lp, x, cfg, kind,
+                    _cached_attn(cfg, kind, q_pos, c, pos3d),
+                    self.capacity_factor)
                 cstack = _cache_update(cstack, nc, i)
                 return (y, cstack), None
             n_scan = jax.tree.leaves(params["layers"])[0].shape[0]
@@ -599,15 +702,11 @@ class Model:
                 c = jax.tree.map(lambda a: a[i], cache["layers"])  # invariant read
                 ck = cache["cross_k"][i]
                 cv = cache["cross_v"][i]
-                h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
-                a, nc = L.attention_block(lp["attn"], h, q_pos, q_pos, cfg, c)
-                y = x + a
-                h = L.rms_norm(y, lp["ln2"], cfg.norm_eps)
-                cr = self._cross_attn(lp["cross"], h, None, q_pos, enc_pos,
-                                      kv=(ck, cv))
-                y = y + cr
-                h = L.rms_norm(y, lp["ln3"], cfg.norm_eps)
-                y = y + L.swiglu_ffn(lp["ffn"], h)
+                y, nc = _dec_layer(
+                    lp, x, cfg,
+                    _cached_attn(cfg, "dense", q_pos, c),
+                    lambda cp, h: self._cross_attn(cp, h, None, q_pos,
+                                                   enc_pos, kv=(ck, cv)))
                 cstack = _cache_update(cstack, nc, i)
                 return (y, cstack), None
             nd = cfg.enc_dec.n_decoder_layers
@@ -652,17 +751,10 @@ class Model:
             def body(carry, inp):
                 x, kp, vp = carry
                 lp, i = inp
-                h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
-                a, kp, vp = L.paged_attention_block(
-                    lp["attn"], h, pos, cfg, kp, vp, i, table)
-                y = constrain(x + a, ("batch", None, "embed"))
-                h = L.rms_norm(y, lp["ln2"], cfg.norm_eps)
-                if fam == "moe":
-                    f, _ = MOE.moe_ffn(lp["moe"], h, cfg.moe,
-                                       self.capacity_factor)
-                else:
-                    f = L.swiglu_ffn(lp["ffn"], h)
-                y = constrain(y + f, ("batch", None, "embed"))
+                y, (kp, vp), _ = _tf_layer(
+                    lp, x, cfg, fam,
+                    _paged_attn(cfg, "dense", pos, table, i, kp, vp),
+                    self.capacity_factor)
                 return (y, kp, vp), None
 
             n_scan = jax.tree.leaves(params["layers"])[0].shape[0]
@@ -682,13 +774,10 @@ class Model:
             for start in range(0, cfg.n_layers, per):
                 stop = min(start + per, cfg.n_layers)
                 if cfg.ssm.attn_every:
-                    ap = params["shared_attn"]
-                    h = L.rms_norm(x, ap["ln1"], cfg.norm_eps)
-                    a, kp, vp = L.paged_attention_block(
-                        ap["attn"], h, pos, cfg, kp, vp, app, table)
-                    x = x + a
-                    h = L.rms_norm(x, ap["ln2"], cfg.norm_eps)
-                    x = x + L.swiglu_ffn(ap["ffn"], h)
+                    x, (kp, vp), _ = _tf_layer(
+                        params["shared_attn"], x, cfg, "dense",
+                        _paged_attn(cfg, "dense", pos, table, app, kp, vp),
+                        self.capacity_factor)
                     app += 1
                 lp_slice = jax.tree.map(lambda a: a[start:stop],
                                         params["mamba_layers"])
@@ -704,6 +793,65 @@ class Model:
                 lambda *xs: jnp.concatenate(xs, 0), *new_mamba)}
             if kp is not None:
                 new_cache["pool"] = {"k": kp, "v": vp}
+
+        elif fam == "mla_moe":
+            # The latent cache IS the paged pool: one "lat" buffer holds
+            # concat(ckv, k_rope) rows for every MLA layer (dense layers
+            # at pool indices [0, kd), MoE layers at kd + i).
+            lat = cache["pool"]["lat"]
+            kd = cfg.moe.first_k_dense
+            if kd:
+                def dbody(carry, inp):
+                    x, lat = carry
+                    lp, i = inp
+                    y, (lat,), _ = _tf_layer(
+                        lp, x, cfg, "dense",
+                        _paged_attn(cfg, "mla", pos, table, i, lat),
+                        self.capacity_factor)
+                    return (y, lat), None
+                (x, lat), _ = jax.lax.scan(
+                    dbody, (x, lat),
+                    (params["dense_layers"], jnp.arange(kd)))
+
+            def body(carry, inp):
+                x, lat = carry
+                lp, i = inp
+                y, (lat,), _ = _tf_layer(
+                    lp, x, cfg, "mla",
+                    _paged_attn(cfg, "mla", pos, table, kd + i, lat),
+                    self.capacity_factor)
+                return (y, lat), None
+            n_scan = jax.tree.leaves(params["layers"])[0].shape[0]
+            (x, lat), _ = jax.lax.scan(
+                body, (x, lat), (params["layers"], jnp.arange(n_scan)))
+            new_cache["pool"] = {"lat": lat}
+
+        elif fam == "enc_dec":
+            # Decoder self-attn KV lives in the pool; cross K/V is
+            # per-slot STATE (it never grows -- one encoder pass per
+            # request), masked per-row to each slot's encoder length.
+            ck_all = cache["state"]["cross_k"]      # (nd, S, enc_max, kv, hd)
+            cv_all = cache["state"]["cross_v"]
+            enc_len = cache["state"]["enc_len"]     # (S,) int32
+            enc_pos = jnp.arange(ck_all.shape[2])
+
+            def body(carry, inp):
+                x, kp, vp = carry
+                lp, i = inp
+                ck = ck_all[i]                      # invariant read
+                cv = cv_all[i]
+                y, (kp, vp) = _dec_layer(
+                    lp, x, cfg,
+                    _paged_attn(cfg, "dense", pos, table, i, kp, vp),
+                    lambda cp, h: self._cross_attn(
+                        cp, h, None, pos[:, None], enc_pos,
+                        kv=(ck, cv), kv_len=enc_len))
+                return (y, kp, vp), None
+            nd = cfg.enc_dec.n_decoder_layers
+            (x, kp, vp), _ = jax.lax.scan(
+                body, (x, cache["pool"]["k"], cache["pool"]["v"]),
+                (params["dec_layers"], jnp.arange(nd)))
+            new_cache["pool"] = {"k": kp, "v": vp}
 
         elif fam == "xlstm":
             # Pure-recurrent: no paged KV at all -- the per-slot state is
@@ -721,6 +869,168 @@ class Model:
         new_cache["pos"] = pos + 1
         logits = L.lm_logits(params, x, cfg)
         return logits[:, -1], new_cache
+
+    # ----------------------------------------------------- chunked prefill
+    def prefill_chunk(self, params: PyTree, cache: PyTree,
+                      batch: Dict[str, jax.Array], dtype=jnp.bfloat16
+                      ) -> Tuple[jax.Array, PyTree]:
+        """One prompt CHUNK of one slot against the paged pool.
+
+        ``batch``: ``tokens`` (1, C) (or ``embeds``), ``pos0`` scalar --
+        the chunk's first absolute position -- and ``slot`` scalar.
+        Chunks are EXACT length (the engine cuts the prompt into
+        ``plan.page_plan()``-sized pieces; the partial final chunk is its
+        own jit bucket), so no pad token ever enters a recurrent state.
+        KV/latent rows are written straight into pool pages through the
+        slot's table row -- the pages ARE the prefill destination, there
+        is no post-prefill copy -- and per-slot recurrent state is
+        sliced/scattered on the slot axis so chunks compose: chunk i+1
+        starts from the state chunk i left.  Returns the chunk's
+        last-token logits (only meaningful on the final chunk) and the
+        updated cache."""
+        cfg = self.cfg
+        fam = cfg.family
+        slot = batch["slot"]
+        x = self._embed_in(params, batch, dtype)
+        x = constrain(x, ("batch", "seq", "embed"))
+        c = x.shape[1]
+        positions = batch["pos0"] + jnp.arange(c)
+        table_row = cache["table"][slot]
+        new_cache = dict(cache)
+
+        def sl(a):
+            return jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1)
+
+        def upd(full, u):
+            return jax.lax.dynamic_update_slice_in_dim(
+                full, u.astype(full.dtype), slot, axis=1)
+
+        if fam in ("dense", "moe"):
+            def body(carry, inp):
+                x, kp, vp = carry
+                lp, i = inp
+                y, (kp, vp), _ = _tf_layer(
+                    lp, x, cfg, fam,
+                    _chunk_attn(cfg, "dense", positions, table_row, i,
+                                kp, vp),
+                    None)     # dropless: chunk-invariant MoE
+                return (y, kp, vp), None
+            n_scan = jax.tree.leaves(params["layers"])[0].shape[0]
+            (x, kp, vp), _ = jax.lax.scan(
+                body, (x, cache["pool"]["k"], cache["pool"]["v"]),
+                (params["layers"], jnp.arange(n_scan)))
+            new_cache["pool"] = {"k": kp, "v": vp}
+
+        elif fam == "mla_moe":
+            lat = cache["pool"]["lat"]
+            kd = cfg.moe.first_k_dense
+            if kd:
+                def dbody(carry, inp):
+                    x, lat = carry
+                    lp, i = inp
+                    y, (lat,), _ = _tf_layer(
+                        lp, x, cfg, "dense",
+                        _chunk_attn(cfg, "mla", positions, table_row, i, lat),
+                        None)     # dropless: chunk-invariant MoE
+                    return (y, lat), None
+                (x, lat), _ = jax.lax.scan(
+                    dbody, (x, lat),
+                    (params["dense_layers"], jnp.arange(kd)))
+
+            def body(carry, inp):
+                x, lat = carry
+                lp, i = inp
+                y, (lat,), _ = _tf_layer(
+                    lp, x, cfg, "mla",
+                    _chunk_attn(cfg, "mla", positions, table_row, kd + i, lat),
+                    None)     # dropless: chunk-invariant MoE
+                return (y, lat), None
+            n_scan = jax.tree.leaves(params["layers"])[0].shape[0]
+            (x, lat), _ = jax.lax.scan(
+                body, (x, lat), (params["layers"], jnp.arange(n_scan)))
+            new_cache["pool"] = {"lat": lat}
+
+        elif fam == "hybrid_ssm":
+            per = cfg.ssm.attn_every or cfg.n_layers
+            kp = vp = None
+            if "k" in cache.get("pool", {}):
+                kp, vp = cache["pool"]["k"], cache["pool"]["v"]
+            mcache = cache["state"]["mamba"]
+            m_slice = jax.tree.map(sl, mcache)
+            new_mamba = []
+            app = 0
+            for start in range(0, cfg.n_layers, per):
+                stop = min(start + per, cfg.n_layers)
+                if cfg.ssm.attn_every:
+                    x, (kp, vp), _ = _tf_layer(
+                        params["shared_attn"], x, cfg, "dense",
+                        _chunk_attn(cfg, "dense", positions, table_row, app,
+                                    kp, vp),
+                        None)     # dropless: chunk-invariant MoE
+                    app += 1
+                lp_slice = jax.tree.map(lambda a: a[start:stop],
+                                        params["mamba_layers"])
+                c_slice = jax.tree.map(lambda a: a[start:stop], m_slice)
+
+                def mscan_c(carry, inp):
+                    lp, cc = inp
+                    y, nc = M2.mamba2_block(lp, carry, cfg, cc)
+                    return y, nc
+                x, ncs = jax.lax.scan(mscan_c, x, (lp_slice, c_slice))
+                new_mamba.append(ncs)
+            nm = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_mamba)
+            new_cache["state"] = {"mamba": jax.tree.map(upd, mcache, nm)}
+            if kp is not None:
+                new_cache["pool"] = {"k": kp, "v": vp}
+
+        elif fam == "xlstm":
+            caches = {"mlstm": jax.tree.map(sl, cache["state"]["mlstm"]),
+                      "slstm": jax.tree.map(sl, cache["state"]["slstm"])}
+            x, ncs = self._xlstm_stack(params, x, caches)
+            new_cache["state"] = {
+                "mlstm": jax.tree.map(upd, cache["state"]["mlstm"],
+                                      ncs["mlstm"]),
+                "slstm": jax.tree.map(upd, cache["state"]["slstm"],
+                                      ncs["slstm"]),
+            }
+
+        elif fam == "enc_dec":
+            ck_all = cache["state"]["cross_k"]      # (nd, S, enc_max, kv, hd)
+            cv_all = cache["state"]["cross_v"]
+            enc_len = cache["state"]["enc_len"][slot]
+            enc_pos = jnp.arange(ck_all.shape[2])
+
+            def body(carry, inp):
+                x, kp, vp = carry
+                lp, i = inp
+                ck = jax.lax.dynamic_slice_in_dim(ck_all[i], slot, 1, axis=0)
+                cv = jax.lax.dynamic_slice_in_dim(cv_all[i], slot, 1, axis=0)
+                y, (kp, vp) = _dec_layer(
+                    lp, x, cfg,
+                    _chunk_attn(cfg, "dense", positions, table_row, i,
+                                kp, vp),
+                    lambda cp, h: self._cross_attn(
+                        cp, h, None, positions, enc_pos,
+                        kv=(ck, cv), kv_len=enc_len))
+                return (y, kp, vp), None
+            nd = cfg.enc_dec.n_decoder_layers
+            (x, kp, vp), _ = jax.lax.scan(
+                body, (x, cache["pool"]["k"], cache["pool"]["v"]),
+                (params["dec_layers"], jnp.arange(nd)))
+            new_cache["pool"] = {"k": kp, "v": vp}
+        else:
+            raise NotImplementedError(
+                f"chunked prefill is not implemented for family {fam!r}")
+
+        logits = L.lm_logits(params, x[:, -1:], cfg)
+        return logits[:, -1], new_cache
+
+    def encode_cross(self, params: PyTree, batch: Dict[str, jax.Array],
+                     dtype=jnp.bfloat16) -> Tuple[jax.Array, jax.Array]:
+        """Encoder pass + per-decoder-layer cross K/V -- the paged
+        engine's admission-time install for enc-dec requests."""
+        enc = self._encode(params, batch["enc_embeds"], dtype)
+        return self.cross_kv(params, enc)
 
     # ------------------------------------------------------------ prefill
     def prefill(self, params: PyTree, batch: Dict[str, jax.Array],
@@ -750,11 +1060,10 @@ class Model:
             if fam == "mla_moe" and cfg.moe.first_k_dense:
                 def dbody(carry, inp):
                     lp, c = inp
-                    h = L.rms_norm(carry, lp["ln1"], cfg.norm_eps)
-                    a, nc = MLA.mla_attention(lp["attn"], h, q_pos, cfg, c)
-                    y = carry + a
-                    h = L.rms_norm(y, lp["ln2"], cfg.norm_eps)
-                    y = y + L.swiglu_ffn(lp["ffn"], h)
+                    y, nc, _ = _tf_layer(
+                        lp, carry, cfg, "dense",
+                        _cached_attn(cfg, "mla", q_pos, c),
+                        None)       # serving is dropless (see moe_ffn)
                     return y, nc
                 x, ndc = jax.lax.scan(
                     dbody, x, (params["dense_layers"],
@@ -763,8 +1072,10 @@ class Model:
 
             def body(carry, inp):
                 lp, c = inp
-                y, nc, _ = _tf_layer(lp, carry, cfg, kind, q_pos, c, pos3d,
-                                     self.capacity_factor)
+                y, nc, _ = _tf_layer(
+                    lp, carry, cfg, kind,
+                    _cached_attn(cfg, kind, q_pos, c, pos3d),
+                    None)           # serving is dropless (see moe_ffn)
                 return y, nc
             body = self._maybe_remat(body) if s > 1 else body
             x, nlc = jax.lax.scan(
@@ -795,34 +1106,14 @@ class Model:
 
     def _prefill_encdec(self, params, batch, max_len, dtype):
         cfg = self.cfg
-        enc = batch["enc_embeds"].astype(dtype)
+        enc = self._encode(params, batch["enc_embeds"], dtype)
         b, se = enc.shape[0], enc.shape[1]
         enc_pos = jnp.arange(se)
 
-        def enc_body(lp, x):
-            h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
-            a, _ = L.attention_block(lp["attn"], h, enc_pos, enc_pos, cfg,
-                                     causal=False)
-            x = x + a
-            h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
-            return x + L.swiglu_ffn(lp["ffn"], h)
-        enc_body = self._maybe_remat(enc_body)
-
-        def escan(x, lp):
-            return enc_body(lp, x), None
-        enc, _ = jax.lax.scan(escan, enc, params["enc_layers"])
-        enc = L.rms_norm(enc, params["enc_final_norm"], cfg.norm_eps)
-
         cache = self.init_cache(b, max_len, dtype, enc_len=se)
-        kv, hd = cfg.n_kv_heads, cfg.head_dim
 
         # Precompute per-layer cross K/V from the encoder output.
-        def cross_kv(cp):
-            k = (enc @ cp["wk"].astype(enc.dtype)).reshape(b, se, kv, hd)
-            v = (enc @ cp["wv"].astype(enc.dtype)).reshape(b, se, kv, hd)
-            return k, v
-        ck, cv = jax.vmap(cross_kv)(
-            jax.tree.map(lambda a: a, params["dec_layers"]["cross"]))
+        ck, cv = self.cross_kv(params, enc)
         cache["cross_k"] = ck.astype(cache["cross_k"].dtype)
         cache["cross_v"] = cv.astype(cache["cross_v"].dtype)
 
@@ -834,15 +1125,11 @@ class Model:
 
         def body(carry, inp):
             lp, c, k_, v_ = inp
-            h = L.rms_norm(carry, lp["ln1"], cfg.norm_eps)
-            a, nc = L.attention_block(lp["attn"], h, dec_pos, dec_pos, cfg, c)
-            y = carry + a
-            h = L.rms_norm(y, lp["ln2"], cfg.norm_eps)
-            cr = self._cross_attn(lp["cross"], h, None, dec_pos, enc_pos,
-                                  kv=(k_, v_))
-            y = y + cr
-            h = L.rms_norm(y, lp["ln3"], cfg.norm_eps)
-            y = y + L.swiglu_ffn(lp["ffn"], h)
+            y, nc = _dec_layer(
+                lp, carry, cfg,
+                _cached_attn(cfg, "dense", dec_pos, c),
+                lambda cp, h: self._cross_attn(cp, h, None, dec_pos,
+                                               enc_pos, kv=(k_, v_)))
             return y, nc
         body = self._maybe_remat(body) if sd > 1 else body
         x, nlc = jax.lax.scan(

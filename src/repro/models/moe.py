@@ -49,12 +49,22 @@ def moe_ffn(
     params: dict,
     x: jax.Array,                 # (B, S, d)
     moe: MoEConfig,
-    capacity_factor: float = 1.25,
+    capacity_factor: Optional[float] = 1.25,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Returns (output, aux_loss)."""
+    """Returns (output, aux_loss).
+
+    ``capacity_factor=None`` dispatches DROPLESS (``cap = s``, the per-row
+    worst case -- an expert can appear at most once in a token's top-k).
+    Chunked prefill uses it: capacity is a function of the dispatch length,
+    so a capacity-dropped token would make the result depend on where the
+    chunk boundaries fall; dropless dispatch makes any chunking of the
+    prompt produce identical tokens (single-token decode is dropless by
+    the same bound, so decode agrees for free).
+    """
     b, s, d = x.shape
     e, k = moe.n_experts, moe.top_k
-    cap = max(1, math.ceil(s * k * capacity_factor / e))
+    cap = s if capacity_factor is None else \
+        max(1, math.ceil(s * k * capacity_factor / e))
 
     gates = jax.nn.softmax(
         jnp.einsum("bsd,de->bse", x, params["router"].astype(jnp.float32)

@@ -26,7 +26,7 @@ from repro.serve.pages import (  # noqa: F401
     PagePool,
     PagedScheduler,
     init_paged_cache,
-    install_slot,
+    reset_slot,
     paged_cache_logical_axes,
 )
 from repro.serve.sampling import SamplingConfig, sample  # noqa: F401
@@ -53,7 +53,7 @@ __all__ = [
     "align_capacity",
     "grow_cache",
     "init_paged_cache",
-    "install_slot",
+    "reset_slot",
     "kv_token_bytes",
     "make_paged_steps",
     "make_serve_steps",

@@ -32,6 +32,7 @@ Two batching engines share the plan (``ServePolicy.batching``):
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence
 
@@ -128,9 +129,17 @@ class ServePolicy:
     ``batching`` selects the engine: "cohort" (PR 4's position-homogeneous
     cohorts -- the A/B baseline), "paged" (the global page pool with
     per-slot continuous batching, DESIGN.md §8; families without a paged
-    decode path -- MLA, enc-dec, VLM -- fall back to cohort), or "auto"
-    (paged exactly when the decode plan exposes a page level to size the
-    pool from AND the family has a per-slot decode path).
+    decode path -- VLM -- fall back to cohort), or "auto" (paged exactly
+    when the decode plan exposes a page level to size the pool from AND
+    the family has a per-slot decode path).
+
+    ``prefill`` selects how the paged engine fills a new slot's KV:
+    "chunked" cuts the prompt into planned-page-sized chunks written
+    directly into pool pages, interleaving decode ticks for resident
+    slots between chunks (DESIGN.md §10); "monolithic" runs the same
+    direct-to-pool path as one whole-prompt chunk (the TTFT/stall A/B
+    baseline -- identical tokens, no interleave).  Cohort batching
+    ignores it.
     """
 
     max_new_tokens: int = 16
@@ -139,12 +148,16 @@ class ServePolicy:
     kv_fraction: float = 0.8        # share of post-weights HBM given to KV
     kv_budget_bytes: Optional[int] = None   # override the planned budget
     batching: str = "cohort"        # | "paged" | "auto"
+    prefill: str = "chunked"        # | "monolithic" (paged engine only)
     sampling: SamplingConfig = field(default_factory=SamplingConfig)
 
     def __post_init__(self):
         if self.batching not in ("cohort", "paged", "auto"):
             raise ValueError(f"unknown batching {self.batching!r}; "
                              f"one of ('cohort', 'paged', 'auto')")
+        if self.prefill not in ("chunked", "monolithic"):
+            raise ValueError(f"unknown prefill {self.prefill!r}; "
+                             f"one of ('chunked', 'monolithic')")
 
 
 @dataclass
@@ -229,6 +242,7 @@ class ServeEngine:
             "active_slot_steps": 0,
             "backfills": 0,
             "stalls": 0,
+            "prefill_chunks": 0,
         }
 
     # ------------------------------------------------------------- plan reads
@@ -538,11 +552,11 @@ class ServeEngine:
         return pages_per_slot, pages_total
 
     def _paged_steps(self, cache, n_slots: int, pages_total: int,
-                     pages_per_slot: int):
+                     pages_per_slot: int, enc_max: int = 0):
         from repro.serve.steps import make_paged_steps
 
         key = (n_slots, pages_total, pages_per_slot,
-               self.page.page_tokens)
+               self.page.page_tokens, enc_max)
         ss = self._paged_steps_cache.get(key)
         if ss is None:
             ss = make_paged_steps(
@@ -552,18 +566,34 @@ class ServeEngine:
             self._paged_steps_cache[key] = ss
         return ss
 
+    def _encode_req(self, steps, req: Request):
+        """Enc-dec admission: run the encoder + cross projections once for
+        this request (jit bucket per encoder length).  ``None`` for every
+        other family."""
+        if self.cfg.family != "enc_dec":
+            return None
+        import jax.numpy as jnp
+
+        enc = jnp.asarray(np.asarray(req.features["enc_embeds"]))[None]
+        return steps.encode(self.params, enc)
+
     def _generate_paged(self, prompts: Sequence[Any], max_new: List[int],
                         scfg: SamplingConfig) -> List[List[int]]:
         """Per-slot continuous batching over the global page pool.
 
-        A fixed batch of ``max_slots`` decode slots shares ONE page pool
-        and ONE jitted decode program (static pool/table/slot shapes --
-        no per-capacity retraces).  Each tick admits pending requests into
-        free slots (single-request prefill scattered into freshly
-        allocated pages), then decodes every slot at its own position
-        (per-slot position vector, per-row kv_len masks, paged-attention
-        gather).  A finished slot's pages free immediately and the slot is
-        backfilled mid-flight -- the utilization win over cohort mode.
+        A fixed batch of ``max_slots`` decode slots shares ONE page pool,
+        ONE jitted decode program (static pool/table/slot shapes -- no
+        per-capacity retraces) and ONE jitted chunked-prefill program per
+        distinct chunk length.  Prefill is CHUNKED (DESIGN.md §10): a new
+        request's prompt is cut into planned-page-sized chunks written
+        straight into the slot's pool pages -- no staging cache, no
+        post-prefill copy -- and every tick runs at most one chunk per
+        prefilling slot before the decode step for the resident slots, so
+        a long prompt never blocks decode for more than one chunk.
+        ``policy.prefill == "monolithic"`` runs the same direct-to-pool
+        path as one whole-prompt chunk (the A/B baseline).  A finished
+        slot's pages free immediately and the slot is backfilled
+        mid-flight -- the utilization win over cohort mode.
         """
         import jax
         import jax.numpy as jnp
@@ -572,7 +602,7 @@ class ServeEngine:
             PagePool,
             PagedScheduler,
             init_paged_cache,
-            install_slot,
+            reset_slot,
         )
 
         reqs = [self._make_request(p, n, paged=True)
@@ -585,20 +615,36 @@ class ServeEngine:
         pool = PagePool(pages_total)
         sched = PagedScheduler(pool, page, n_slots, pages_per_slot,
                                window=window)
+        enc_max = max((r.group[1] for r in reqs), default=0)
         cache = init_paged_cache(self.cfg, self.model, n_slots, pages_total,
                                  page.page_tokens, pages_per_slot,
-                                 self.dtype)
+                                 self.dtype, enc_len=enc_max)
         steps = self._paged_steps(cache, n_slots, pages_total,
-                                  pages_per_slot)
+                                  pages_per_slot, enc_max)
         self.metrics["pages_total"] = pages_total - 1     # usable pages
         self.metrics["pages_per_slot"] = pages_per_slot
+        # Chunk length: the planner's page (KV write granule == page ->
+        # every full chunk fills exactly one fresh page); token-free
+        # families chunk by the planner's page token count anyway (state
+        # advances chunkwise, nothing to page).  "monolithic" (or no page
+        # geometry at all) degenerates to one whole-prompt chunk.
+        chunk_tokens = self.plan.chunk_tokens() or page.page_tokens
+        if self.policy.prefill == "monolithic" or chunk_tokens <= 0:
+            chunk_tokens = 0                  # whole prompt per chunk
+        trace: List[Any] = []
+        self.metrics["interleave"] = trace
 
         table_np = np.zeros((n_slots, pages_per_slot), np.int32)
         pos_np = np.zeros((n_slots,), np.int32)
         next_np = np.zeros((n_slots, 1), np.int32)
         ever_occupied: set = set()
         requeued: set = set()           # rids re-admitting after preemption
+        prefills: Dict[int, int] = {}   # slot -> prompt tokens prefilled
         peak_pages = 0
+        t0 = time.monotonic()
+        token_times: Dict[int, List[float]] = {r.rid: [] for r in reqs}
+        self.metrics["token_times"] = token_times
+        self.metrics["start_time"] = t0
         for r in reqs:
             sched.submit(r)
         step = 0
@@ -608,6 +654,11 @@ class ServeEngine:
             pos_np[i] = 0
             next_np[i, 0] = 0
 
+        def push_table(i: int) -> None:
+            row = [p if p is not None else 0 for p in sched.slots[i].pages]
+            table_np[i, :len(row)] = row
+            table_np[i, len(row):] = 0
+
         def emit_token(slot: int, rid: int, max_new_bound: int,
                        tok: int) -> None:
             """Deliver one sampled token for a slot: record it, queue it
@@ -615,6 +666,7 @@ class ServeEngine:
             retire the slot when its request is done (pages free at once
             -- the next admission backfills)."""
             outputs[rid].append(tok)
+            token_times[rid].append(time.monotonic())
             self.metrics["tokens"] += 1
             next_np[slot, 0] = tok
             if window:
@@ -624,6 +676,18 @@ class ServeEngine:
                 sched.finish(slot)
                 clear_slot(slot)
 
+        def preempt(victim: int) -> None:
+            """Recompute preemption: the victim's tokens (and any partial
+            prefill) regenerate from scratch after re-admission."""
+            vreq = sched.evict(victim)
+            self.metrics["tokens"] -= len(outputs[vreq.rid])
+            outputs[vreq.rid] = []
+            token_times[vreq.rid] = []
+            requeued.add(vreq.rid)
+            prefills.pop(victim, None)
+            clear_slot(victim)
+            self.metrics["evictions"] += 1
+
         while sched.has_work():
             progressed = False
             # Capacity FIRST, oldest request first: growth claims its pages
@@ -632,11 +696,13 @@ class ServeEngine:
             # evict.  An older slot preempts strictly-younger victims
             # (recompute); a slot with no younger victim STALLS this tick
             # (pages pinned, decode skipped) -- the oldest slot always
-            # progresses, so no eviction ping-pong.
+            # progresses, so no eviction ping-pong.  Prefilling slots
+            # claim capacity in the chunk phase instead (ahead of their
+            # chunk front, not their decode position).
             stalled: set = set()
             for i in sorted(sched.active(),
                             key=lambda j: sched.slots[j].rid):
-                if sched.slots[i] is None:
+                if sched.slots[i] is None or i in prefills:
                     continue                  # evicted by an older grower
                 while not sched.ensure_capacity(i):
                     if sched.table_full(i):
@@ -653,33 +719,21 @@ class ServeEngine:
                         stalled.add(i)
                         self.metrics["stalls"] += 1
                         break
-                    # Recompute preemption: the victim's tokens
-                    # regenerate from scratch after re-admission.
-                    vreq = sched.evict(victim)
-                    self.metrics["tokens"] -= len(outputs[vreq.rid])
-                    outputs[vreq.rid] = []
-                    requeued.add(vreq.rid)
-                    clear_slot(victim)
-                    self.metrics["evictions"] += 1
+                    preempt(victim)
 
-            for slot, req, pages in sched.admit():
-                plen = req.prompt_len
-                if self._growable():
-                    cap = align_capacity(plen + 1, page)
-                else:
-                    cap = plen + req.max_new + 1
-                ss = self._steps(1, plen, cap)
-                logits, pre_cache = ss.prefill(
-                    self.params, self._stack_features([req]))
-                cache = install_slot(self.cfg, cache, slot, pre_cache,
-                                     pages, plen)
-                row = [p if p is not None else 0 for p in pages]
+            # Admission: a slot + its first page (token-free: none); the
+            # prompt itself streams in below, one chunk per tick, straight
+            # into pool pages.  Enc-dec runs its encoder once here and
+            # installs the cross K/V into the slot's state rows.
+            for slot, req, pages in sched.admit(chunked=True):
+                cache = reset_slot(self.cfg, self.model, cache, slot,
+                                   cross_kv=self._encode_req(steps, req),
+                                   enc_len=req.group[1])
                 table_np[slot] = 0
-                table_np[slot, :len(row)] = row
-                pos_np[slot] = plen
-                tok = int(np.asarray(
-                    sample(logits, scfg, step_key(scfg, step))).reshape(-1)[0])
-                step += 1
+                push_table(slot)
+                pos_np[slot] = 0
+                next_np[slot, 0] = 0
+                prefills[slot] = 0
                 # A backfill is a NEW request taking a previously used
                 # slot mid-flight; a preempted request's own recompute
                 # re-admission is not one.
@@ -687,40 +741,102 @@ class ServeEngine:
                     self.metrics["backfills"] += 1
                 requeued.discard(req.rid)
                 ever_occupied.add(slot)
-                emit_token(slot, req.rid, req.max_new, tok)
                 progressed = True
 
-            active = [i for i in sched.active() if i not in stalled]
+            # Chunk phase: one chunk per prefilling slot per tick, BEFORE
+            # the decode step -- a prefilling slot rides through the decode
+            # batch (its garbage write at the chunk front is overwritten by
+            # the next chunk; its recurrent state is restored below), so
+            # chunks and decode ticks interleave instead of serializing.
+            for slot in sorted(prefills):
+                s = sched.slots[slot]
+                if s is None or slot not in prefills:
+                    continue                  # preempted by a sibling chunk
+                req, plen = s.req, s.req.prompt_len
+                done = prefills[slot]
+                c = plen - done if chunk_tokens <= 0 else \
+                    min(chunk_tokens, plen - done)
+                if window:
+                    sched.reclaim_window(slot, window)   # behind the front
+                grew = True
+                while not sched.ensure_capacity(slot, upto=done + c):
+                    if sched.table_full(slot):
+                        raise RuntimeError(
+                            f"slot {slot}: prompt needs more than the "
+                            f"{pages_per_slot}-page table")
+                    victim = sched.victim(slot)
+                    if victim is None:
+                        if len(sched.active()) == 1:
+                            raise RuntimeError(
+                                f"page pool ({pool.pages_total - 1} pages)"
+                                f" cannot hold one prefill chunk; "
+                                f"raise kv_budget_bytes")
+                        stalled.add(slot)
+                        self.metrics["stalls"] += 1
+                        grew = False
+                        break
+                    preempt(victim)
+                if not grew:
+                    continue                  # retry the chunk next tick
+                peak_pages = max(peak_pages, pool.used_pages)
+                push_table(slot)
+                cache["table"] = jnp.asarray(table_np)
+                toks = jnp.asarray(
+                    np.asarray(req.features["tokens"][done:done + c],
+                               np.int32))[None]
+                logits, cache = steps.prefill_chunk(
+                    self.params, cache, toks, jnp.int32(done),
+                    jnp.int32(slot))
+                self.metrics["prefill_chunks"] += 1
+                trace.append(("chunk", slot, done, c))
+                done += c
+                prefills[slot] = done
+                s.pos = done
+                pos_np[slot] = done
+                progressed = True
+                if done >= plen:
+                    del prefills[slot]
+                    tok = int(np.asarray(
+                        sample(logits, scfg,
+                               step_key(scfg, step))).reshape(-1)[0])
+                    step += 1
+                    emit_token(slot, req.rid, req.max_new, tok)
+
+            active = [i for i in sched.active()
+                      if i not in stalled and i not in prefills]
             if active:
                 # Refresh the device-side page tables from the scheduler:
                 # growth appended pages, reclaim nulled out-of-window ones.
                 for i in sched.active():
-                    row = [p if p is not None else 0
-                           for p in sched.slots[i].pages]
-                    table_np[i, :len(row)] = row
-                    table_np[i, len(row):] = 0
+                    push_table(i)
                 cache["table"] = jnp.asarray(table_np)
                 cache["pos"] = jnp.asarray(pos_np)
-                # Stalled slots still ride through the decode batch.  Their
-                # KV writes land on the null page (their table has no entry
-                # at pos // T yet), but RECURRENT state (Mamba/xLSTM) would
-                # advance on the discarded tick and double-apply the input
-                # token on resume -- so snapshot their state rows and
-                # restore them after the step (rare: stalls only happen
-                # under pool pressure).
-                stalled_live = [i for i in stalled
-                                if sched.slots[i] is not None]
+                # Stalled AND prefilling slots still ride through the
+                # decode batch.  Their KV writes land on the null page or
+                # at the chunk front (overwritten by the next chunk), but
+                # RECURRENT state (Mamba/xLSTM) would advance on the
+                # discarded tick and corrupt the slot on resume -- so
+                # snapshot their state rows and restore them after the
+                # step.
+                frozen = sorted({i for i in (set(stalled) | set(prefills))
+                                 if sched.slots[i] is not None})
                 snapshot = None
-                if stalled_live and cache.get("state"):
-                    sl = jnp.asarray(stalled_live)
-                    snapshot = jax.tree.map(lambda a: a[:, sl],
-                                            cache["state"])
+                if frozen and cache.get("state"):
+                    sl = jnp.asarray(frozen)
+                    # Slot axis is 1 for layer-stacked buffers, 0 for
+                    # per-slot vectors (enc-dec's ``enc_len``).
+                    snapshot = jax.tree.map(
+                        lambda a: a[:, sl] if a.ndim >= 2 else a[sl],
+                        cache["state"])
                 logits, cache = steps.decode(
                     self.params, cache, {"tokens": jnp.asarray(next_np)})
                 if snapshot is not None:
                     cache["state"] = jax.tree.map(
-                        lambda ns, snap: ns.at[:, sl].set(snap),
+                        lambda ns, snap: (ns.at[:, sl].set(snap)
+                                          if ns.ndim >= 2
+                                          else ns.at[sl].set(snap)),
                         cache["state"], snapshot)
+                trace.append(("decode", tuple(active)))
                 toks = np.asarray(
                     sample(logits, scfg, step_key(scfg, step))).reshape(-1)
                 step += 1

@@ -21,14 +21,15 @@ runtimes own placement instead of the caller (Thibault et al.; Rasch's
     the ring buffer).  A finished slot frees its pages at once and is
     backfilled by the next pending request mid-flight: continuous batching
     at slot granularity.
-  * ``init_paged_cache`` / ``install_slot`` -- the pooled cache pytree the
+  * ``init_paged_cache`` / ``reset_slot`` -- the pooled cache pytree the
     paged decode step (``Model.decode_step_paged``) consumes: ``pool``
-    (one shared ``(L, P, T, KV, D)`` buffer per attention-layer group),
-    ``state`` (per-slot recurrent/conv buffers, batch on axis 1),
-    ``table`` (the per-slot page table) and the per-slot position vector
-    ``pos``.  ``install_slot`` scatters a single-request prefill cache
-    into the slot's pages and state rows (ring-rotated window prefills are
-    un-rotated through their ``pos mod w`` slot map first).
+    (one shared ``(L, P, T, KV, D)`` buffer per attention-layer group;
+    MLA's is a single ``lat`` latent buffer), ``state`` (per-slot
+    recurrent/conv buffers, batch on axis 1; enc-dec adds per-slot cross
+    K/V), ``table`` (the per-slot page table) and the per-slot position
+    vector ``pos``.  ``reset_slot`` re-initializes a slot's state rows at
+    admission; prompt KV reaches the pages via chunked prefill
+    (``Model.prefill_chunk``), never via a post-prefill copy.
 
 One decode jit bucket serves the whole run -- pool, table and slot count
 are static shapes -- where the cohort engine retraces per capacity step.
@@ -47,9 +48,12 @@ from repro.serve.scheduler import Request
 PyTree = Any
 
 #: Families with a per-slot paged decode path (``Model.decode_step_paged``).
-#: MLA's latent cache and enc-dec's encoder-keyed cross K/V are future
-#: work; the engine falls back to cohort batching for them.
-PAGED_FAMILIES = ("dense", "moe", "hybrid_ssm", "xlstm")
+#: MLA's latent cache pages like KV (one shared "lat" pool buffer) and
+#: enc-dec pages its decoder self-attn KV (cross K/V is per-slot state --
+#: it never grows).  Only vlm still falls back to cohort batching: its
+#: 3-D mrope positions don't fit the per-slot position vector yet.
+PAGED_FAMILIES = ("dense", "moe", "hybrid_ssm", "xlstm", "mla_moe",
+                  "enc_dec")
 
 
 # ---------------------------------------------------------------------------
@@ -192,18 +196,41 @@ class PagedScheduler:
     def submit(self, req: Request) -> None:
         self.pending.append(req)
 
-    def admit(self) -> List[Tuple[int, Request, List[Optional[int]]]]:
+    def admit(self, chunked: bool = False
+              ) -> List[Tuple[int, Request, List[Optional[int]]]]:
         """Fill free slots from the queue head.  Returns
         ``[(slot, request, logical_pages), ...]`` where ``logical_pages``
         maps logical page index -> physical id, with ``None`` marking
         born-reclaimed out-of-window pages; the engine prefills each
-        request and installs it into its slot."""
+        request and installs it into its slot.
+
+        ``chunked`` admits for CHUNKED prefill: the slot starts at
+        ``pos = 0`` with only its FIRST page allocated -- the engine grows
+        it page by page ahead of the chunk front (``ensure_capacity(slot,
+        upto=...)``) and window-reclaims behind it, so a long windowed
+        prompt's peak page usage is its resident window, same as the
+        monolithic admission bill."""
         out: List[Tuple[int, Request, List[Optional[int]]]] = []
         for slot, s in enumerate(self.slots):
             if s is not None or not self.pending:
                 continue
             head = self.pending[0]
             live, dead = self._admit_pages(head)
+            if chunked:
+                first = min(live, 1)
+                ids = self.pool.alloc(first)
+                if ids is None and first:
+                    if not any(x is not None for x in self.slots) and not out:
+                        raise ValueError(
+                            f"request {head.rid} needs at least 1 KV page; "
+                            f"the pool holds {self.pool.pages_total - 1} -- "
+                            f"raise kv_budget_bytes")
+                    break
+                self.pending.popleft()
+                self.slots[slot] = SlotState(rid=head.rid, req=head,
+                                             pos=0, pages=list(ids or []))
+                out.append((slot, head, list(ids or [])))
+                continue
             ids = self.pool.alloc(live)
             if ids is None:
                 if not any(x is not None for x in self.slots) and not out:
@@ -221,24 +248,26 @@ class PagedScheduler:
         return out
 
     # -------------------------------------------------------------- growth
-    def ensure_capacity(self, slot: int) -> bool:
-        """Make room for one more token in ``slot``.  True when the slot
-        already has capacity or one page was granted; False when the pool
-        is exhausted (the engine then preempts and retries) or the slot's
-        logical page table is full (``pages_per_slot`` -- check
-        ``table_full`` to tell the cases apart: eviction cannot help a
-        full table)."""
+    def ensure_capacity(self, slot: int, upto: Optional[int] = None) -> bool:
+        """Make room in ``slot`` for tokens up to position ``upto``
+        (exclusive; default ``pos + 1`` -- one more decode token).  Grows
+        page by page.  True when capacity exists or was granted; False
+        when the pool is exhausted (the engine then preempts and retries)
+        or the slot's logical page table is full (``pages_per_slot`` --
+        check ``table_full`` to tell the cases apart: eviction cannot
+        help a full table).  Chunked prefill passes ``upto = done +
+        chunk`` to allocate just ahead of the chunk front."""
         s = self.slots[slot]
         if self.page.page_bytes <= 0:
             return True
-        if s.pos + 1 <= len(s.pages) * self.page.page_tokens:
-            return True
-        if len(s.pages) >= self.pages_per_slot:
-            return False
-        ids = self.pool.alloc(1)
-        if ids is None:
-            return False
-        s.pages.extend(ids)
+        need = s.pos + 1 if upto is None else upto
+        while need > len(s.pages) * self.page.page_tokens:
+            if len(s.pages) >= self.pages_per_slot:
+                return False
+            ids = self.pool.alloc(1)
+            if ids is None:
+                return False
+            s.pages.extend(ids)
         return True
 
     def table_full(self, slot: int) -> bool:
@@ -311,14 +340,18 @@ def _n_attn_apps(cfg: ModelConfig) -> int:
 
 def init_paged_cache(cfg: ModelConfig, model, n_slots: int, n_pages: int,
                      page_tokens: int, n_logical_pages: int,
-                     dtype) -> PyTree:
+                     dtype, enc_len: int = 0) -> PyTree:
     """The pooled cache pytree ``Model.decode_step_paged`` consumes.
 
     ``pool`` holds the shared page pool per attention-layer group
-    (``(L, n_pages, page_tokens, KV, D)``), ``state`` the per-slot
-    recurrent/conv buffers (batch on axis 1, taken from the family's
-    ``init_cache`` shapes), ``table`` the ``(n_slots, n_logical_pages)``
-    page table (0 = null page) and ``pos`` the per-slot position vector.
+    (``(L, n_pages, page_tokens, KV, D)`` -- MLA's is one ``lat`` buffer
+    of ``concat(ckv, k_rope)`` rows with a single shared latent head),
+    ``state`` the per-slot recurrent/conv buffers (batch on axis 1, taken
+    from the family's ``init_cache`` shapes; enc-dec adds the per-slot
+    cross K/V -- sized ``enc_len``, the max encoder length this run
+    serves -- and its valid-length vector), ``table`` the
+    ``(n_slots, n_logical_pages)`` page table (0 = null page) and ``pos``
+    the per-slot position vector.
     """
     import jax.numpy as jnp
 
@@ -340,6 +373,11 @@ def init_paged_cache(cfg: ModelConfig, model, n_slots: int, n_pages: int,
     }
     if fam in ("dense", "moe"):
         cache["pool"] = pool_kv(cfg.n_layers)
+    elif fam == "mla_moe":
+        m = cfg.mla
+        lat_dim = m.kv_lora_rank + m.rope_head_dim
+        cache["pool"] = {"lat": jnp.zeros(
+            (cfg.n_layers, n_pages, page_tokens, 1, lat_dim), dtype)}
     elif fam == "hybrid_ssm":
         base = model.init_cache(n_slots, page_tokens, dtype)
         cache["state"] = {"mamba": base["mamba"]}
@@ -349,77 +387,61 @@ def init_paged_cache(cfg: ModelConfig, model, n_slots: int, n_pages: int,
     elif fam == "xlstm":
         base = model.init_cache(n_slots, page_tokens, dtype)
         cache["state"] = {"mlstm": base["mlstm"], "slstm": base["slstm"]}
+    elif fam == "enc_dec":
+        nd = cfg.enc_dec.n_decoder_layers
+        cache["pool"] = pool_kv(nd)
+        cache["state"] = {
+            "cross_k": jnp.zeros((nd, n_slots, enc_len, kv, hd), dtype),
+            "cross_v": jnp.zeros((nd, n_slots, enc_len, kv, hd), dtype),
+            "enc_len": jnp.zeros((n_slots,), jnp.int32),
+        }
     return cache
 
 
-#: Which prefill-cache subtree feeds the pool vs the per-slot state, per
-#: family (the other leaves -- ``len``, ``pos`` -- are superseded by the
-#: per-slot position vector).
-_POOL_GROUP = {"dense": "layers", "moe": "layers", "hybrid_ssm": "attn"}
+#: Per-slot recurrent-state groups per family (reset at admission).
 _STATE_GROUPS = {"hybrid_ssm": ("mamba",), "xlstm": ("mlstm", "slstm")}
 
 
-def install_slot(cfg: ModelConfig, cache: PyTree, slot: int,
-                 prefill_cache: PyTree, page_ids: Sequence[int],
-                 prompt_len: int) -> PyTree:
-    """Scatter one request's single-sequence prefill cache into its slot.
+def reset_slot(cfg: ModelConfig, model, cache: PyTree, slot: int,
+               cross_kv: Optional[Tuple[Any, Any]] = None,
+               enc_len: int = 0) -> PyTree:
+    """Reset one slot's per-slot state rows for a fresh (chunked) prefill.
 
-    KV leaves land in the slot's freshly allocated pages (``page_ids``,
-    logical order); recurrent/conv state overwrites the slot's batch row.
-    Sliding-window prefills whose prompt overflowed the ring are
-    un-rotated first (slot ``a mod w`` holds absolute position ``a``), and
-    out-of-window positions simply stay on the null page -- the kernel's
-    window mask never reads them.
-
-    Known trade: this runs un-jitted, so the functional ``.at[].set`` on
-    the pool copies the whole pool buffer per admission -- O(pool), fine
-    at CPU test scale but the wrong cost on HBM-sized pools.  The fix is
-    the ROADMAP's chunked-prefill item: write prompt KV into the pages
-    directly from a jitted, buffer-donating prefill instead of copying a
-    dense prefill cache in afterwards.
+    Chunked prefill writes KV straight into pool pages, so admission only
+    has to (a) reset the slot's recurrent/conv state rows to the family's
+    ``init_cache`` values -- NOT zeros: mLSTM/sLSTM stabilizer rows
+    initialize to the running-max floor -- and (b) for enc-dec, install
+    the request's pre-computed cross K/V (``cross_kv``: ``(nd, 1, Se, KV,
+    HD)`` each) and its valid length.  The pool itself needs no reset:
+    chunk writes land exactly on the slot's allocated pages.
     """
-    import jax.numpy as jnp
+    import jax
 
-    fam = cfg.family
+    state_groups = _STATE_GROUPS.get(cfg.family, ())
     new_cache = dict(cache)
-    group = _POOL_GROUP.get(fam)
-    live = [(j, p) for j, p in enumerate(page_ids) if p is not None]
-    if group is not None and group in prefill_cache and cache["pool"] \
-            and live:
-        t = cache["pool"]["k"].shape[2]
-        n_pages = len(page_ids)
-        logical = jnp.asarray([j for j, _ in live])
-        phys = jnp.asarray([p for _, p in live], jnp.int32)
-        pool = dict(cache["pool"])
-        for name in ("k", "v"):
-            leaf = prefill_cache[group][name]      # (L, 1, s_kv, KV, HD)
-            w = leaf.shape[2]
-            lo = 0
-            if cfg.sliding_window and w <= cfg.sliding_window \
-                    and prompt_len >= w:
-                lo = prompt_len - w                # ring overflowed: tail only
-                idx = jnp.arange(lo, prompt_len) % w
-                toks = leaf[:, 0, idx]
-            else:
-                toks = leaf[:, 0, :prompt_len]
-            buf = jnp.zeros((leaf.shape[0], n_pages * t) + leaf.shape[3:],
-                            leaf.dtype)
-            buf = buf.at[:, lo:prompt_len].set(toks)
-            buf = buf.reshape((leaf.shape[0], n_pages, t) + leaf.shape[3:])
-            # Only live pages are written: ``None`` entries (born-reclaimed
-            # out-of-window pages) have no physical page to hold them.
-            pool[name] = pool[name].at[:, phys].set(buf[:, logical])
-        new_cache["pool"] = pool
-    state_groups = _STATE_GROUPS.get(fam, ())
     if state_groups:
-        import jax
-
+        fresh = model.init_cache(1, cache["pool"]["k"].shape[2]
+                                 if cache.get("pool") else 1,
+                                 jax.tree.leaves(cache["state"])[0].dtype)
         state = dict(cache["state"])
         for g in state_groups:
             state[g] = jax.tree.map(
                 lambda dst, src: dst.at[:, slot].set(
                     src[:, 0].astype(dst.dtype)),
-                state[g], prefill_cache[g])
+                state[g], fresh[g])
+        new_cache["state"] = state
+    if cfg.family == "enc_dec":
+        import jax.numpy as jnp
+
+        ck, cv = cross_kv
+        state = dict(new_cache["state"])
+        se = ck.shape[2]
+        for name, src in (("cross_k", ck), ("cross_v", cv)):
+            dst = state[name]
+            row = jnp.zeros(dst.shape[:1] + dst.shape[2:], dst.dtype)
+            row = row.at[:, :se].set(src[:, 0].astype(dst.dtype))
+            state[name] = dst.at[:, slot].set(row)
+        state["enc_len"] = state["enc_len"].at[slot].set(enc_len)
         new_cache["state"] = state
     return new_cache
 
@@ -445,9 +467,20 @@ def paged_cache_logical_axes(cfg: ModelConfig, cache: PyTree) -> PyTree:
         "state": {},
     }
     if cache.get("pool"):
-        nd = cache["pool"]["k"].ndim      # (L, P, T, KV, HD)
-        pool_ax = ("layers", "kv_pages", None, "kv_heads", None)[:nd]
-        axes["pool"] = {"k": pool_ax, "v": pool_ax}
+        pool_ax = ("layers", "kv_pages", None, "kv_heads", None)
+        axes["pool"] = {name: pool_ax[:cache["pool"][name].ndim]
+                        for name in cache["pool"]}
     if cache.get("state"):
-        axes["state"] = cache_logical_axes(cfg, cache["state"], False)
+        state = dict(cache["state"])
+        cross = {}
+        for name in ("cross_k", "cross_v"):
+            if name in state:
+                state.pop(name)
+                cross[name] = ("layers", None, None, "kv_heads", None)
+        if "enc_len" in state:
+            state.pop("enc_len")
+            cross["enc_len"] = (None,)
+        axes["state"] = cache_logical_axes(cfg, state, False) if state \
+            else {}
+        axes["state"].update(cross)
     return axes

@@ -58,15 +58,18 @@ class ServeSteps:
 
 @dataclass
 class PagedServeSteps:
-    """The paged engine's single decode program: per-slot positions, page
-    table gather, one jit bucket for the whole run (pool, table and slot
-    count are static shapes)."""
+    """The paged engine's programs: one decode jit bucket for the whole
+    run (pool, table and slot count are static shapes), plus chunked
+    prefill -- one extra bucket per distinct chunk length, i.e. the full
+    planned chunk and one per partial-final-chunk remainder."""
 
     decode: Callable                # (params, paged_cache, batch) -> (logits, cache)
+    prefill_chunk: Callable         # (params, cache, tokens, pos0, slot) -> (logits, cache)
     param_sharding: PyTree
     cache_sharding: PyTree
     model: Model
     plan: Any = None
+    encode: Optional[Callable] = None   # enc-dec: (params, enc_embeds) -> (ck, cv)
 
 
 def make_serve_steps(
@@ -236,13 +239,41 @@ def make_paged_steps(
         with use_mesh_rules(mesh, rules):
             return model.decode_step_paged(params, cache, batch, dtype=dtype)
 
+    def prefill_chunk_fn(params, cache, tokens, pos0, slot):
+        with use_mesh_rules(mesh, rules):
+            return model.prefill_chunk(
+                params, cache,
+                {"tokens": tokens, "pos0": pos0, "slot": slot}, dtype=dtype)
+
+    encode_fn = None
+    if cfg.family == "enc_dec":
+        def encode_fn(params, enc_embeds):
+            with use_mesh_rules(mesh, rules):
+                return model.encode_cross(
+                    params, {"enc_embeds": enc_embeds}, dtype=dtype)
+
     if jit:
+        from jax.sharding import PartitionSpec
+
+        repl = NamedSharding(mesh, PartitionSpec())
         decode_fn = jax.jit(
             decode_fn,
             in_shardings=(p_shard, c_shard, d_shard),
             out_shardings=(None, c_shard),
             donate_argnums=(1,),
         )
-    return PagedServeSteps(decode=decode_fn, param_sharding=p_shard,
-                           cache_sharding=c_shard, model=model,
-                           plan=decode_plan)
+        # One retrace per distinct chunk length: the engine cuts prompts
+        # into planned-page-sized chunks, so the buckets are {page, each
+        # distinct prompt_len % page} -- bounded, and the full-chunk
+        # bucket dominates.
+        prefill_chunk_fn = jax.jit(
+            prefill_chunk_fn,
+            in_shardings=(p_shard, c_shard, repl, repl, repl),
+            out_shardings=(None, c_shard),
+            donate_argnums=(1,),
+        )
+        if encode_fn is not None:
+            encode_fn = jax.jit(encode_fn, in_shardings=(p_shard, repl))
+    return PagedServeSteps(decode=decode_fn, prefill_chunk=prefill_chunk_fn,
+                           param_sharding=p_shard, cache_sharding=c_shard,
+                           model=model, plan=decode_plan, encode=encode_fn)

@@ -178,3 +178,51 @@ class TestRulesMechanics:
             assert active_rule("kv_seq") == "model"
             assert active_rule("experts") is None
         assert active_rule("kv_seq") is None
+
+
+class TestXLSTMStateSharding:
+    """Regression: the production 16x16 mesh rejected xLSTM's decode cache
+    (pjit: ``cache['mlstm']['C']`` dim 2 is H=4 state heads, not divisible
+    by the 16-wide model axis) and the 32k calibration cells failed.  The
+    rules must fall back to SUB-AXIS sharding: heads unsharded, the
+    per-head state inner dim (mLSTM dh=1024, sLSTM d/H=512) carries TP."""
+
+    PROD = AbstractMesh((("data", 16), ("model", 16)))
+
+    def test_state_inner_carries_tp_when_heads_cannot(self):
+        cfg = get_model_config("xlstm-1.3b")
+        rules = arch_rules(cfg, self.PROD, state_bytes_per_param=2)
+        assert rules.act_rules["state_heads"] is None
+        assert rules.act_rules["state_inner"] == "model"
+
+    def test_every_cache_dim_divides_its_mesh_axis(self):
+        import jax.numpy as jnp
+        import jax.tree_util as tu
+
+        from repro.launch.specs import cache_logical_axes
+        from repro.models.model import build_model
+
+        cfg = get_model_config("xlstm-1.3b")
+        rules = arch_rules(cfg, self.PROD, state_bytes_per_param=2)
+        model = build_model(cfg, remat="none")
+        cache = jax.eval_shape(lambda: model.init_cache(32, 64, jnp.float32))
+        axes = cache_logical_axes(cfg, cache, long_context=False)
+        sizes = dict(self.PROD.shape)
+        is_axes = lambda n: isinstance(n, tuple)
+        leaves = tu.tree_leaves_with_path(cache)
+        specs = tu.tree_leaves(axes, is_leaf=is_axes)
+        assert len(leaves) == len(specs)
+        for (path, leaf), ax in zip(leaves, specs):
+            spec = rules.act_spec(ax)
+            for dim, entry in zip(leaf.shape, tuple(spec)):
+                for mesh_ax in ((entry,) if isinstance(entry, str)
+                                else (entry or ())):
+                    assert dim % sizes[mesh_ax] == 0, \
+                        (tu.keystr(path), leaf.shape, spec)
+
+    def test_small_model_axis_still_shards_heads(self):
+        cfg = get_model_config("xlstm-1.3b")         # 4 state heads
+        mesh = AbstractMesh((("data", 4), ("model", 4)))
+        rules = arch_rules(cfg, mesh, state_bytes_per_param=2)
+        assert rules.act_rules["state_heads"] == "model"
+        assert rules.act_rules["state_inner"] is None
