@@ -543,6 +543,120 @@ def prefill_bench(quick: bool) -> list:
     return out
 
 
+def prefix_dry() -> list:
+    """--only prefix --dry: radix-cache capacity vs the plan, no timing.
+
+    Builds the paged engine with ``prefix_cache="radix"``, runs two
+    prompts sharing a page-aligned prefix through one slot, and asserts
+    the cache's byte budget is EXACTLY the mesh-level HBM leftover the
+    planner recorded (``plan.prefix_budget()``, from
+    ``detail["page_table"]["prefix_budget_bytes"]`` -- DESIGN.md §11),
+    with the second request hitting the first's published pages.  CI
+    greps ``prefix_budget_matches_plan=True`` (``ci/run_tests.sh``).
+    """
+    import numpy as np
+    from repro.configs import get_model_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve import ServeEngine, ServePolicy
+
+    cfg = get_model_config("llama3.2-1b").reduced()
+    engine = ServeEngine(
+        cfg, make_host_mesh(),
+        policy=ServePolicy(max_new_tokens=2, max_slots=1, max_len=160,
+                           batching="paged", prefix_cache="radix"))
+    t = engine.page.page_tokens
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab_size, 3 * t, dtype=np.int32)
+    tails = [rng.integers(0, cfg.vocab_size, t - 2, dtype=np.int32)
+             for _ in range(2)]
+    tails[1][0] = (tails[0][0] + 1) % cfg.vocab_size
+    engine.generate([np.concatenate([shared, tl]) for tl in tails])
+    m = engine.metrics
+    plan_budget = engine.plan.prefix_budget()
+    cache_budget = engine._paged_session.prefix.budget_bytes
+    ok = (
+        plan_budget is not None
+        and plan_budget > 0
+        and m["prefix_budget_bytes"] == plan_budget
+        and cache_budget == plan_budget
+        and m["prefix_hits"] == 1
+        and m["prefix_hit_tokens"] == 3 * t
+        and m["pages_saved"] > 0
+    )
+    return [
+        f"prefix_dry_budget,0,plan_budget={plan_budget};"
+        f"cache_budget={cache_budget};"
+        f"metric_budget={m['prefix_budget_bytes']};"
+        f"hits={m['prefix_hits']};hit_tokens={m['prefix_hit_tokens']};"
+        f"pages_saved={m['pages_saved']};"
+        f"resident_pages={m['prefix_resident_pages']};"
+        f"prefix_budget_matches_plan={ok}",
+    ]
+
+
+def prefix_bench(quick: bool) -> list:
+    """--only prefix: shared-system-prompt A/B, cached vs cold TTFT.
+
+    The workload millions of deployments run: every request opens with
+    the same system prompt.  Three single-request ``generate`` calls
+    through one radix engine: X compiles every chunk bucket (its timings
+    are discarded), Y measures a COLD prompt (disjoint tokens -- a
+    radix miss, full prefill), Z measures a CACHED prompt sharing Y's
+    page-aligned system prefix -- admission starts chunked prefill at
+    the first unshared token, so Z prefills only the tail.  The tail is
+    sized to the final chunk bucket X already compiled (``t - 2``), so
+    the A/B is pure prefill work, not compile skew.  Reports TTFT and
+    prefill tokens for both, from the engine's per-token timestamps.
+    """
+    import numpy as np
+    from repro.configs import get_model_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve import ServeEngine, ServePolicy
+
+    cfg = get_model_config("llama3.2-1b").reduced()
+    n_new = 4 if quick else 8
+    engine = ServeEngine(
+        cfg, make_host_mesh(),
+        policy=ServePolicy(max_new_tokens=n_new, max_slots=1, max_len=256,
+                           batching="paged", prefix_cache="radix"))
+    t = engine.page.page_tokens
+    rng = np.random.default_rng(0)
+    system = rng.integers(0, cfg.vocab_size, 3 * t, dtype=np.int32)
+
+    def prompt(prefix, seed):
+        r = np.random.default_rng(seed)
+        return np.concatenate(
+            [prefix, r.integers(0, cfg.vocab_size, t - 2, dtype=np.int32)])
+
+    def run(p):
+        before = engine.metrics["prefill_tokens"]   # counters accumulate
+        engine.generate([p], max_new_tokens=n_new)
+        m = engine.metrics
+        # token_times is keyed by rid, which counts across calls.
+        (times,) = m["token_times"].values()
+        return (times[0] - m["start_time"],
+                m["prefill_tokens"] - before, m)
+
+    warmup = rng.integers(0, cfg.vocab_size, 4 * t - 2, dtype=np.int32)
+    run(warmup)                             # X: compile, discard timings
+    cold_ttft, cold_tokens, _ = run(prompt(system, 1))      # Y: radix miss
+    hot_ttft, hot_tokens, m = run(prompt(system, 2))        # Z: radix hit
+    return [
+        f"prefix_ab_cold,{cold_ttft * 1e6:.0f},"
+        f"ttft_ms={cold_ttft * 1e3:.2f};prefill_tokens={cold_tokens};"
+        f"prompt_tokens={4 * t - 2}",
+        f"prefix_ab_cached,{hot_ttft * 1e6:.0f},"
+        f"ttft_ms={hot_ttft * 1e3:.2f};prefill_tokens={hot_tokens};"
+        f"hit_tokens={m['prefix_hit_tokens']};"
+        f"pages_saved={m['pages_saved']};cow_copies={m['cow_copies']}",
+        f"prefix_ab_summary,0,shared_tokens={3 * t};"
+        f"ttft_cold_ms={cold_ttft * 1e3:.2f};"
+        f"ttft_cached_ms={hot_ttft * 1e3:.2f};"
+        f"prefill_saved_tokens={cold_tokens - hot_tokens};"
+        f"cached_ttft_lower={hot_ttft < cold_ttft}",
+    ]
+
+
 def serve_bench(quick: bool) -> list:
     """--only serve: tok/s of the plan-driven engine on this host, next to
     the planned-vs-naive page sizes (naive = the legacy loop's allocation
@@ -649,6 +763,7 @@ SECTIONS = {
     "serve": serve_bench,
     "paged": paged_bench,
     "prefill": prefill_bench,
+    "prefix": prefix_bench,
     "tune": tune_bench,
 }
 
@@ -789,7 +904,8 @@ def main() -> None:
         # sweep enumeration + VMEM filter) -- any --only list made up
         # entirely of these runs them in order.
         dry_sections = {"serve": serve_dry, "paged": paged_dry,
-                        "prefill": prefill_dry, "tune": tune_dry}
+                        "prefill": prefill_dry, "prefix": prefix_dry,
+                        "tune": tune_dry}
         only = [s.strip() for s in args.only.split(",") if s.strip()]
         if only and all(s in dry_sections for s in only):
             for s in only:

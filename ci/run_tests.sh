@@ -69,6 +69,16 @@ printf '%s\n' "$prefill_out"
 printf '%s\n' "$prefill_out" | grep -q 'chunk_matches_page=True' \
     || { echo "FAIL: prefill chunk does not match the planned page"; exit 1; }
 
+echo "== smoke: radix prefix cache (capacity vs plan budget) =="
+# The cross-request prefix cache end to end on every run: the radix
+# cache's byte capacity must be exactly the mesh-level HBM leftover the
+# planner recorded (plan.prefix_budget(), DESIGN.md §11), and a request
+# sharing a published prefix must hit it.
+prefix_out="$(python -m benchmarks.run --only prefix --dry)"
+printf '%s\n' "$prefix_out"
+printf '%s\n' "$prefix_out" | grep -q 'prefix_budget_matches_plan=True' \
+    || { echo "FAIL: radix cache capacity does not match the plan"; exit 1; }
+
 echo "== smoke: tuning sweep (--dry: enumerate + VMEM filter) =="
 # The autotuning harness end to end on every run, without timing anything:
 # every swept candidate -- the analytic center and all its power-of-two
@@ -83,8 +93,8 @@ echo "== smoke: BENCH json emitter (schema repro-bench-v1) =="
 # Every benchmark run must be able to write a committable perf artifact:
 # run the cheap dry sections through --json and check the schema keys.
 bench_json="$(mktemp /tmp/bench_ci_XXXX.json)"
-python -m benchmarks.run --dry --only serve,paged,prefill,tune --json "$bench_json" \
-    > /dev/null
+python -m benchmarks.run --dry --only serve,paged,prefill,prefix,tune \
+    --json "$bench_json" > /dev/null
 python - "$bench_json" <<'EOF'
 import json, sys
 doc = json.load(open(sys.argv[1]))

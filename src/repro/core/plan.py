@@ -266,6 +266,26 @@ class HierarchicalPlan:
                 return lp.detail.get("page_table")
         return None
 
+    def prefix_budget(self) -> Optional[int]:
+        """The mesh-level HBM leftover, in the scheduler's LOGICAL bytes
+        (global per-token KV x tokens), that the cross-request prefix
+        cache may keep resident (None if no page level; see
+        ``serve/prefix.py``).  Recorded by the page level as
+        ``detail["page_table"]["prefix_budget_bytes"]``; plans serialized
+        before the field existed fall back to the equivalent
+        ``pages_total`` x global page bytes product."""
+        ptab = self.page_table()
+        if ptab is None:
+            return None
+        if "prefix_budget_bytes" in ptab:
+            return int(ptab["prefix_budget_bytes"])
+        page = self.page_plan() or {}
+        global_page = (int(page.get("page_tokens", 0))
+                       * int(page.get("tok_bytes", 0))
+                       * int(page.get("layers", 1))
+                       * int(page.get("kv_shard", 1)))
+        return int(ptab.get("pages_total", 0)) * global_page
+
     def chunk_tokens(self) -> Optional[int]:
         """The prefill CHUNK length -- the page level's ``page_tokens``
         (None if no page level).  The page is, by construction, the
@@ -630,6 +650,12 @@ def _plan_page_level(level: MemoryLevel, workload: Workload,
             "pages_per_slot": n_pages,
             "pages_total": int(pages_total),
             "slots_bound": int(pages_total // n_pages) if pages_total else 0,
+            # The mesh-level HBM leftover in LOGICAL bytes (global token
+            # bytes, like the scheduler's budget): what the prefix cache
+            # (serve/prefix.py) may keep resident across requests.
+            "prefix_budget_bytes": int(
+                per_chip_free * max(1, kv_shard)) if mesh_budget_bytes
+            else 0,
         }, **({"tuning": tuning} if tuning is not None else {})},
     )
 

@@ -21,6 +21,14 @@ kernel.  Masks are per row: causal (``kpos <= len-1``), sliding window
 (``kpos > len-1-window``), and emptiness (``len == 0`` rows produce a
 fully-masked, all-zero output the engine ignores).
 
+The kernel is strictly a GATHER: it never writes KV, so the same physical
+page may appear in many slots' table rows at once.  That is what the
+cross-request radix prefix cache (``repro.serve.prefix``, DESIGN.md §11)
+relies on -- a shared prefix's pages are mapped read-only into every
+hitting slot's table, and all KV writes happen outside this kernel
+through the layer-side scatters, which the engine constrains to
+refcount-1 (private or copy-on-write) pages.
+
 Runs in interpret mode on CPU (the default off-TPU), which is how the
 paged-vs-cohort token-identity tests drive it.
 """

@@ -7,6 +7,8 @@ CLI only names the architecture, the prompt mix, the sampling config, and
 ``--batching {cohort,paged,auto}`` -- "auto" (default) picks the paged
 page-pool engine whenever the decode plan exposes a page level (and the
 family has a per-slot decode path), falling back to cohort batching.
+``--prefix {off,radix}`` turns on the cross-request radix prefix cache
+(DESIGN.md §11) in the paged engine.
 """
 
 from __future__ import annotations
@@ -35,6 +37,7 @@ def main(argv=None) -> int:
     seed = int(overrides.pop("seed", "0"))
     batching = overrides.pop("batching", "auto")
     prefill = overrides.pop("prefill", "chunked")
+    prefix = overrides.pop("prefix", "off")
 
     cfg = get_model_config(arch).reduced()
     sampling = SamplingConfig(kind=kind, temperature=temperature,
@@ -46,6 +49,8 @@ def main(argv=None) -> int:
     if prefill not in ("chunked", "monolithic"):
         raise SystemExit(f"--prefill must be chunked|monolithic, "
                          f"got {prefill!r}")
+    if prefix not in ("off", "radix"):
+        raise SystemExit(f"--prefix must be off|radix, got {prefix!r}")
     # "auto" resolves inside ServeEngine against its own decode plan:
     # paged exactly when the plan exposes a page level and the family has
     # a per-slot decode path; ``--batching cohort`` keeps the PR 4 engine
@@ -55,7 +60,7 @@ def main(argv=None) -> int:
         policy=ServePolicy(max_new_tokens=n_new, max_slots=max(1, batch),
                            max_len=prompt_len + n_new + 1,
                            batching=batching, prefill=prefill,
-                           sampling=sampling),
+                           prefix_cache=prefix, sampling=sampling),
         dtype=jax.numpy.float32)
 
     rng = np.random.default_rng(seed)
@@ -83,6 +88,14 @@ def main(argv=None) -> int:
           f"slot_utilization={m.get('slot_utilization', 0.0):.2f} "
           f"backfills={m.get('backfills', 0)} "
           f"peak_resident={m.get('peak_resident_bytes', 0)}B")
+    if m.get("prefix_cache") == "radix":
+        print(f"[serve] prefix: hits={m.get('prefix_hits', 0)} "
+              f"hit_tokens={m.get('prefix_hit_tokens', 0)} "
+              f"pages_saved={m.get('pages_saved', 0)} "
+              f"cow_copies={m.get('cow_copies', 0)} "
+              f"hit_rate={m.get('prefix_hit_rate', 0.0):.2f} "
+              f"resident_pages={m.get('prefix_resident_pages', 0)} "
+              f"budget={m.get('prefix_budget_bytes', 0)}B")
     print(f"[serve] sample continuation ids: {outs[0][:8]}")
     return 0
 

@@ -498,6 +498,14 @@ def paged_attention_block(
     lands on the pool's reserved scratch page 0), then the Pallas paged
     kernel streams the slot's pages -- block size = the planned page.
     Returns ``(out (S, 1, d), k_pool, v_pool)``.
+
+    Write contract under prefix sharing (DESIGN.md §11): with the radix
+    cache on, a table row may map pages that OTHER rows (and the tree)
+    also map.  Those shared pages sit strictly below the slot's write
+    frontier -- ``table[s, pos // T]`` always resolves to a page with
+    pool refcount 1 (private: freshly allocated or the CoW copy), which
+    the engine asserts host-side before every decode tick.  Shared pages
+    are read-only here: the kernel only ever gathers from them.
     """
     from repro.kernels.paged_attention import paged_attention
 
@@ -559,6 +567,14 @@ def paged_prefill_block(
     decode row of length ``position + 1`` in the Pallas paged kernel.
     Zero post-prefill copies: the pages ARE the prefill destination.
     Returns ``(out (1, C, d), k_pool, v_pool)``.
+
+    Write contract under prefix sharing (DESIGN.md §11): on a radix
+    prefix hit the chunk front starts AFTER the shared pages, so every
+    ``positions // T`` this chunk scatters into is a refcount-1 page
+    (the mid-page case writes into the slot's private CoW copy, never
+    the cached original) -- asserted host-side by the engine before the
+    chunk runs.  The shared prefix pages are only gathered from, through
+    the same ``table_row``.
     """
     from repro.kernels.paged_attention import paged_attention
 

@@ -29,6 +29,11 @@ from repro.serve.pages import (  # noqa: F401
     reset_slot,
     paged_cache_logical_axes,
 )
+from repro.serve.prefix import (  # noqa: F401
+    PREFIX_FAMILIES,
+    PrefixHit,
+    RadixPrefixCache,
+)
 from repro.serve.sampling import SamplingConfig, sample  # noqa: F401
 from repro.serve.scheduler import Request, ServeScheduler  # noqa: F401
 from repro.serve.steps import (  # noqa: F401
@@ -40,10 +45,13 @@ from repro.serve.steps import (  # noqa: F401
 
 __all__ = [
     "PAGED_FAMILIES",
+    "PREFIX_FAMILIES",
     "PagePool",
     "PagedScheduler",
     "PagedServeSteps",
     "PageSpec",
+    "PrefixHit",
+    "RadixPrefixCache",
     "Request",
     "SamplingConfig",
     "ServeEngine",

@@ -140,6 +140,14 @@ class ServePolicy:
     direct-to-pool path as one whole-prompt chunk (the TTFT/stall A/B
     baseline -- identical tokens, no interleave).  Cohort batching
     ignores it.
+
+    ``prefix_cache`` turns on cross-request KV reuse in the paged engine
+    (DESIGN.md §11): "radix" keeps finished prompt pages resident in a
+    refcounted radix tree (budgeted by ``plan.prefix_budget()``, the
+    mesh-level HBM leftover) so a request sharing a cached prefix
+    prefills only its unshared suffix; "off" disables it.  Families
+    without exact cross-request KV reuse (enc-dec, vlm) and cohort
+    batching ignore it.
     """
 
     max_new_tokens: int = 16
@@ -149,6 +157,7 @@ class ServePolicy:
     kv_budget_bytes: Optional[int] = None   # override the planned budget
     batching: str = "cohort"        # | "paged" | "auto"
     prefill: str = "chunked"        # | "monolithic" (paged engine only)
+    prefix_cache: str = "off"       # | "radix" (paged engine only)
     sampling: SamplingConfig = field(default_factory=SamplingConfig)
 
     def __post_init__(self):
@@ -158,6 +167,23 @@ class ServePolicy:
         if self.prefill not in ("chunked", "monolithic"):
             raise ValueError(f"unknown prefill {self.prefill!r}; "
                              f"one of ('chunked', 'monolithic')")
+        if self.prefix_cache not in ("off", "radix"):
+            raise ValueError(f"unknown prefix_cache {self.prefix_cache!r}; "
+                             f"one of ('off', 'radix')")
+
+
+@dataclass
+class _PagedSession:
+    """Device state the paged engine keeps ALIVE between ``generate``
+    calls when the prefix cache is on: the pool's refcounts, the pooled
+    cache buffers (they hold the cached prefixes' KV) and the radix tree
+    itself.  Rebuilt whenever the pool geometry changes (the cached pages
+    would not survive a reshape)."""
+
+    key: Any
+    pool: Any                       # serve.pages.PagePool
+    cache: PyTree                   # pooled cache pytree
+    prefix: Any                     # serve.prefix.RadixPrefixCache
 
 
 @dataclass
@@ -225,6 +251,7 @@ class ServeEngine:
                                             dtype=jnp.float32))
         self._steps_cache: Dict[Any, ServeSteps] = {}
         self._paged_steps_cache: Dict[Any, Any] = {}
+        self._paged_session: Optional[_PagedSession] = None
         self._next_rid = 0
         self.metrics: Dict[str, Any] = {
             "batching": self.batching,
@@ -243,6 +270,14 @@ class ServeEngine:
             "backfills": 0,
             "stalls": 0,
             "prefill_chunks": 0,
+            "prefill_tokens": 0,
+            "prefix_cache": policy.prefix_cache,
+            "prefix_hits": 0,
+            "prefix_misses": 0,
+            "prefix_hit_tokens": 0,
+            "pages_saved": 0,
+            "cow_copies": 0,
+            "prefix_nodes_inserted": 0,
         }
 
     # ------------------------------------------------------------- plan reads
@@ -539,7 +574,9 @@ class ServeEngine:
         width is the plan's per-slot page bound, stretched to the longest
         submitted request; the physical pool is the planned KV budget in
         pages, capped at what the slots can ever pin (plus the null
-        page)."""
+        page).  With the prefix cache on, the cap doubles (still inside
+        the budget): cached prefixes occupy pool pages BESIDE the live
+        slots' working set, up to ``plan.prefix_budget()``."""
         page = self.page
         if page.page_bytes <= 0:          # token-free family (xLSTM)
             return 1, 2
@@ -548,8 +585,18 @@ class ServeEngine:
                    for r in reqs)
         pages_per_slot = max(int(ptab.get("pages_per_slot") or 1), need)
         budget_pages = max(1, self.scheduler.budget_bytes // page.page_bytes)
-        pages_total = 1 + min(budget_pages, n_slots * pages_per_slot)
+        slot_pages = n_slots * pages_per_slot
+        extra = 0
+        if self.policy.prefix_cache == "radix" and \
+                self.cfg.family in self._prefix_families():
+            budget = self.plan.prefix_budget() or 0
+            extra = min(budget // page.page_bytes, slot_pages)
+        pages_total = 1 + min(budget_pages, slot_pages + extra)
         return pages_per_slot, pages_total
+
+    def _prefix_families(self):
+        from repro.serve.prefix import PREFIX_FAMILIES
+        return PREFIX_FAMILIES
 
     def _paged_steps(self, cache, n_slots: int, pages_total: int,
                      pages_per_slot: int, enc_max: int = 0):
@@ -576,6 +623,30 @@ class ServeEngine:
 
         enc = jnp.asarray(np.asarray(req.features["enc_embeds"]))[None]
         return steps.encode(self.params, enc)
+
+    def _apply_prefix_hit(self, cache: PyTree, slot: int, hit) -> PyTree:
+        """Realize a ``PrefixHit`` on the device cache: copy the CoW
+        source page into the slot's private copy (the only page-sized
+        device copy in the whole hit path) and restore the recurrent
+        state snapshot into the slot's state rows.  Shared full pages
+        need no device work at all -- the slot's page table already
+        points at them."""
+        import jax
+        import jax.numpy as jnp
+
+        cache = dict(cache)
+        if hit.cow is not None and cache.get("pool"):
+            src, dst = hit.cow
+            cache["pool"] = {
+                k: buf.at[:, dst].set(buf[:, src])
+                for k, buf in cache["pool"].items()}
+        if hit.state is not None and cache.get("state"):
+            cache["state"] = jax.tree.map(
+                lambda a, s: (a.at[:, slot].set(
+                    jnp.asarray(s).astype(a.dtype)) if a.ndim >= 2
+                    else a.at[slot].set(jnp.asarray(s).astype(a.dtype))),
+                cache["state"], hit.state)
+        return cache
 
     def _generate_paged(self, prompts: Sequence[Any], max_new: List[int],
                         scfg: SamplingConfig) -> List[List[int]]:
@@ -612,13 +683,39 @@ class ServeEngine:
         page = self.page
         window = self.cfg.sliding_window
         pages_per_slot, pages_total = self._paged_geometry(reqs, n_slots)
-        pool = PagePool(pages_total)
-        sched = PagedScheduler(pool, page, n_slots, pages_per_slot,
-                               window=window)
         enc_max = max((r.group[1] for r in reqs), default=0)
-        cache = init_paged_cache(self.cfg, self.model, n_slots, pages_total,
-                                 page.page_tokens, pages_per_slot,
-                                 self.dtype, enc_len=enc_max)
+        prefix_on = (self.policy.prefix_cache == "radix"
+                     and self.cfg.family in self._prefix_families())
+        geo_key = (n_slots, pages_per_slot, pages_total, enc_max)
+        sess = self._paged_session if prefix_on else None
+        if sess is not None and sess.key == geo_key:
+            # Cross-call persistence: the pool's refcounts, the cached
+            # prefixes' device pages and the radix tree survive between
+            # generate() calls as long as the geometry matches.
+            pool, cache, prefix = sess.pool, sess.cache, sess.prefix
+        else:
+            pool = PagePool(pages_total)
+            cache = init_paged_cache(self.cfg, self.model, n_slots,
+                                     pages_total, page.page_tokens,
+                                     pages_per_slot, self.dtype,
+                                     enc_len=enc_max)
+            prefix = None
+            if prefix_on:
+                from repro.serve.prefix import (
+                    STATE_FAMILIES,
+                    RadixPrefixCache,
+                )
+
+                budget = self.plan.prefix_budget()
+                if not budget:            # no page level (xLSTM): fall back
+                    budget = self.scheduler.budget_bytes
+                prefix = RadixPrefixCache(
+                    page.page_tokens, max(0, page.page_bytes), budget,
+                    pool, has_state=self.cfg.family in STATE_FAMILIES)
+                self._paged_session = _PagedSession(geo_key, pool, cache,
+                                                    prefix)
+        sched = PagedScheduler(pool, page, n_slots, pages_per_slot,
+                               window=window, prefix=prefix)
         steps = self._paged_steps(cache, n_slots, pages_total,
                                   pages_per_slot, enc_max)
         self.metrics["pages_total"] = pages_total - 1     # usable pages
@@ -640,6 +737,7 @@ class ServeEngine:
         ever_occupied: set = set()
         requeued: set = set()           # rids re-admitting after preemption
         prefills: Dict[int, int] = {}   # slot -> prompt tokens prefilled
+        chunk_snaps: Dict[int, Dict[int, Any]] = {}  # slot -> {tokens: state}
         peak_pages = 0
         t0 = time.monotonic()
         token_times: Dict[int, List[float]] = {r.rid: [] for r in reqs}
@@ -685,6 +783,7 @@ class ServeEngine:
             token_times[vreq.rid] = []
             requeued.add(vreq.rid)
             prefills.pop(victim, None)
+            chunk_snaps.pop(victim, None)
             clear_slot(victim)
             self.metrics["evictions"] += 1
 
@@ -724,16 +823,29 @@ class ServeEngine:
             # Admission: a slot + its first page (token-free: none); the
             # prompt itself streams in below, one chunk per tick, straight
             # into pool pages.  Enc-dec runs its encoder once here and
-            # installs the cross K/V into the slot's state rows.
-            for slot, req, pages in sched.admit(chunked=True):
+            # installs the cross K/V into the slot's state rows.  A prefix
+            # hit starts the slot at ``hit.tokens`` with the shared pages
+            # already in its table: CoW-copy the divergent page, restore
+            # the state snapshot, and prefill covers only the suffix.
+            for slot, req, pages, hit in sched.admit(chunked=True):
                 cache = reset_slot(self.cfg, self.model, cache, slot,
                                    cross_kv=self._encode_req(steps, req),
                                    enc_len=req.group[1])
                 table_np[slot] = 0
                 push_table(slot)
-                pos_np[slot] = 0
+                pos_np[slot] = sched.slots[slot].pos
                 next_np[slot, 0] = 0
-                prefills[slot] = 0
+                prefills[slot] = sched.slots[slot].pos
+                if hit is not None:
+                    cache = self._apply_prefix_hit(cache, slot, hit)
+                    self.metrics["prefix_hits"] += 1
+                    self.metrics["prefix_hit_tokens"] += hit.tokens
+                    self.metrics["pages_saved"] += \
+                        hit.tokens // page.page_tokens
+                    if hit.cow is not None:
+                        self.metrics["cow_copies"] += 1
+                elif prefix is not None:
+                    self.metrics["prefix_misses"] += 1
                 # A backfill is a NEW request taking a previously used
                 # slot mid-flight; a preempted request's own recompute
                 # re-admission is not one.
@@ -754,10 +866,17 @@ class ServeEngine:
                     continue                  # preempted by a sibling chunk
                 req, plen = s.req, s.req.prompt_len
                 done = prefills[slot]
+                # A prefix hit can start mid-page; the first suffix chunk
+                # realigns to the chunk grid (cold starts reduce to the
+                # plain ``min(chunk, remaining)``).
                 c = plen - done if chunk_tokens <= 0 else \
-                    min(chunk_tokens, plen - done)
-                if window:
-                    sched.reclaim_window(slot, window)   # behind the front
+                    min(chunk_tokens - done % chunk_tokens, plen - done)
+                if window and prefix is None:
+                    # Behind the front.  With the prefix cache on, prompt
+                    # pages must SURVIVE to insertion below -- window
+                    # reclaim resumes at decode (the tree's reference then
+                    # keeps them resident through it).
+                    sched.reclaim_window(slot, window)
                 grew = True
                 while not sched.ensure_capacity(slot, upto=done + c):
                     if sched.table_full(slot):
@@ -779,6 +898,17 @@ class ServeEngine:
                 if not grew:
                     continue                  # retry the chunk next tick
                 peak_pages = max(peak_pages, pool.used_pages)
+                if page.page_bytes > 0:
+                    # CoW safety: every page this chunk writes must be
+                    # PRIVATE (refcount 1) -- shared prefix pages sit
+                    # strictly below the suffix front and are mapped
+                    # read-only (see models/layers.paged_attention_block).
+                    for j in range(done // page.page_tokens,
+                                   -(-(done + c) // page.page_tokens)):
+                        p = s.pages[j] if j < len(s.pages) else None
+                        assert p is None or pool.refcount(p) == 1, \
+                            f"chunk would write shared page {p} (rc=" \
+                            f"{pool.refcount(p)})"
                 push_table(slot)
                 cache["table"] = jnp.asarray(table_np)
                 toks = jnp.asarray(
@@ -788,14 +918,30 @@ class ServeEngine:
                     self.params, cache, toks, jnp.int32(done),
                     jnp.int32(slot))
                 self.metrics["prefill_chunks"] += 1
+                self.metrics["prefill_tokens"] += c
                 trace.append(("chunk", slot, done, c))
                 done += c
                 prefills[slot] = done
                 s.pos = done
                 pos_np[slot] = done
                 progressed = True
+                if prefix is not None and prefix.has_state and \
+                        cache.get("state") and \
+                        done % page.page_tokens == 0:
+                    # Page-boundary state snapshot (host copy): the radix
+                    # node for this block restores it on a future hit.
+                    chunk_snaps.setdefault(slot, {})[done] = jax.tree.map(
+                        lambda a: (np.asarray(a[:, slot]) if a.ndim >= 2
+                                   else np.asarray(a[slot])),
+                        cache["state"])
                 if done >= plen:
                     del prefills[slot]
+                    if prefix is not None:
+                        self.metrics["prefix_nodes_inserted"] += \
+                            prefix.insert(
+                                np.asarray(req.features["tokens"]),
+                                list(s.pages),
+                                snaps=chunk_snaps.pop(slot, None))
                     tok = int(np.asarray(
                         sample(logits, scfg,
                                step_key(scfg, step))).reshape(-1)[0])
@@ -804,6 +950,17 @@ class ServeEngine:
 
             active = [i for i in sched.active()
                       if i not in stalled and i not in prefills]
+            if active and page.page_bytes > 0 and prefix is not None:
+                # CoW safety for decode writes: the write position's page
+                # is always private (shared prefix pages end strictly
+                # below the suffix, and positions only grow).
+                for i in active:
+                    s = sched.slots[i]
+                    j = s.pos // page.page_tokens
+                    p = s.pages[j] if j < len(s.pages) else None
+                    assert p is None or pool.refcount(p) == 1, \
+                        f"decode would write shared page {p} (rc=" \
+                        f"{pool.refcount(p)})"
             if active:
                 # Refresh the device-side page tables from the scheduler:
                 # growth appended pages, reclaim nulled out-of-window ones.
@@ -851,8 +1008,14 @@ class ServeEngine:
                 progressed = True
 
             peak_pages = max(peak_pages, pool.used_pages)
-            assert pool.used_pages == sched.used_pages_by_slots(), \
-                "page pool out of sync with the slot tables"
+            if prefix is None:
+                assert pool.used_pages == sched.used_pages_by_slots(), \
+                    "page pool out of sync with the slot tables"
+            else:
+                # Shared pages carry one refcount per mapping: every slot
+                # table entry plus every radix-tree node.
+                assert pool.total_refs == sched.used_pages_by_slots() \
+                    + prefix.n_pages, "refcount ledger out of sync"
             assert pool.pages_allocated - pool.pages_released == \
                 pool.used_pages, "page accounting leak"
             if not progressed:
@@ -862,5 +1025,16 @@ class ServeEngine:
         self.metrics["peak_pages"] = peak_pages
         self.metrics["pages_allocated"] = pool.pages_allocated
         self.metrics["pages_released"] = pool.pages_released
+        if prefix is not None:
+            seen = prefix.hits + prefix.misses
+            self.metrics["prefix_hit_rate"] = \
+                prefix.hits / seen if seen else 0.0
+            self.metrics["prefix_resident_pages"] = prefix.n_pages
+            self.metrics["prefix_resident_bytes"] = prefix.resident_bytes
+            self.metrics["prefix_evicted_pages"] = prefix.evicted_pages
+            self.metrics["prefix_budget_bytes"] = prefix.budget_bytes
+            sess = self._paged_session
+            if sess is not None and sess.pool is pool:
+                sess.cache = cache    # carry the device pages forward
         self._finalize_utilization()
         return [outputs[r.rid] for r in reqs]

@@ -62,12 +62,22 @@ PAGED_FAMILIES = ("dense", "moe", "hybrid_ssm", "xlstm", "mla_moe",
 
 
 class PagePool:
-    """Free-list allocator over the physical page pool.
+    """Refcounting free-list allocator over the physical page pool.
 
     ``pages_total`` includes the reserved null page 0, which is never
-    allocated or freed.  ``pages_allocated`` / ``pages_released`` are
-    cumulative, so ``pages_allocated - pages_released == used_pages`` is
-    an invariant the scheduler property test reconciles after every op.
+    allocated or freed.  Every page carries a reference count: ``alloc``
+    hands out pages at refcount 1, ``incref`` adds a read-only mapping
+    (the prefix cache sharing one physical page into several slot tables
+    and/or its radix tree), and ``free`` *decrefs* -- the page returns to
+    the free list only when its last reference drops.  Freeing a page
+    that holds no reference (double free, or a scheduler bug returning a
+    page it never owned) raises instead of silently corrupting the free
+    list.
+
+    ``pages_allocated`` / ``pages_released`` count PHYSICAL transitions
+    (free list -> used and back), so
+    ``pages_allocated - pages_released == used_pages`` stays an invariant
+    under sharing and ``assert_reconciled`` pins it after every op.
     """
 
     def __init__(self, pages_total: int):
@@ -78,6 +88,7 @@ class PagePool:
         self.pages_total = int(pages_total)
         # pop() yields ascending physical ids -- deterministic layouts.
         self._free = list(range(self.pages_total - 1, 0, -1))
+        self._rc = [0] * self.pages_total
         self.pages_allocated = 0
         self.pages_released = 0
 
@@ -89,21 +100,63 @@ class PagePool:
     def used_pages(self) -> int:
         return (self.pages_total - 1) - len(self._free)
 
+    @property
+    def total_refs(self) -> int:
+        """Sum of live refcounts: slot-table references + prefix-tree
+        references (the ledger the engine reconciles every tick)."""
+        return sum(self._rc)
+
+    def refcount(self, pid: int) -> int:
+        return self._rc[pid]
+
     def alloc(self, n: int) -> Optional[List[int]]:
-        """``n`` physical pages, or None when the pool cannot hold them
-        (never a partial grant)."""
+        """``n`` physical pages at refcount 1, or None when the pool
+        cannot hold them (never a partial grant)."""
         if n > len(self._free):
             return None
         out = [self._free.pop() for _ in range(n)]
+        for i in out:
+            self._rc[i] = 1
         self.pages_allocated += n
         return out
 
+    def incref(self, pid: int) -> None:
+        """Add a reference to a LIVE page (a shared read-only mapping).
+        Increffing a free page would resurrect it without removing it
+        from the free list, so that raises."""
+        if pid <= 0 or pid >= self.pages_total:
+            raise ValueError(f"incref of invalid page id {pid}")
+        if self._rc[pid] <= 0:
+            raise ValueError(f"incref of free page {pid}")
+        self._rc[pid] += 1
+
     def free(self, ids: Sequence[int]) -> None:
+        """Drop one reference per id; a page returns to the free list
+        (and counts as released) only at refcount zero."""
         for i in ids:
             if i == 0:
                 raise ValueError("page 0 is the reserved null page")
-            self._free.append(i)
-        self.pages_released += len(ids)
+            if i < 0 or i >= self.pages_total or self._rc[i] <= 0:
+                raise ValueError(
+                    f"double free (or free of never-allocated page) {i}")
+            self._rc[i] -= 1
+            if self._rc[i] == 0:
+                self._free.append(i)
+                self.pages_released += 1
+
+    def assert_reconciled(self) -> None:
+        """Flow counters vs free list vs refcounts (the property tests'
+        per-op pin)."""
+        assert self.pages_allocated - self.pages_released == \
+            self.used_pages, "page flow counters do not reconcile"
+        assert len(set(self._free)) == len(self._free), \
+            "free list holds a duplicate page"
+        assert all(self._rc[i] == 0 for i in self._free), \
+            "free list holds a referenced page"
+        assert self._rc[0] == 0, "null page acquired a refcount"
+        live = sum(1 for c in self._rc if c > 0)
+        assert live == self.used_pages, \
+            "refcounted pages do not match used pages"
 
 
 # ---------------------------------------------------------------------------
@@ -156,15 +209,26 @@ class PagedScheduler:
     """
 
     def __init__(self, pool: PagePool, page: PageSpec, n_slots: int,
-                 pages_per_slot: int, window: int = 0):
+                 pages_per_slot: int, window: int = 0, prefix=None):
         self.pool = pool
         self.page = page
         self.n_slots = max(1, n_slots)
         self.pages_per_slot = max(1, pages_per_slot)
         self.window = max(0, window)
+        self.prefix = prefix            # serve.prefix.RadixPrefixCache|None
         self.slots: List[Optional[SlotState]] = [None] * self.n_slots
         self.pending: Deque[Request] = deque()
         self.n_evictions = 0
+
+    def _alloc(self, n: int) -> Optional[List[int]]:
+        """Pool alloc with prefix-cache back-pressure: when the free list
+        cannot grant ``n`` pages, evict unreferenced radix-tree pages (LRU)
+        before giving up -- live slots outrank cached prefixes."""
+        ids = self.pool.alloc(n)
+        if ids is None and self.prefix is not None:
+            self.prefix.release_pages(need=n)
+            ids = self.pool.alloc(n)
+        return ids
 
     # ----------------------------------------------------------- inventory
     def has_work(self) -> bool:
@@ -197,11 +261,13 @@ class PagedScheduler:
         self.pending.append(req)
 
     def admit(self, chunked: bool = False
-              ) -> List[Tuple[int, Request, List[Optional[int]]]]:
+              ) -> List[Tuple[int, Request, List[Optional[int]], Any]]:
         """Fill free slots from the queue head.  Returns
-        ``[(slot, request, logical_pages), ...]`` where ``logical_pages``
-        maps logical page index -> physical id, with ``None`` marking
-        born-reclaimed out-of-window pages; the engine prefills each
+        ``[(slot, request, logical_pages, hit), ...]`` where
+        ``logical_pages`` maps logical page index -> physical id, with
+        ``None`` marking born-reclaimed out-of-window pages, and ``hit``
+        is the ``serve.prefix.PrefixHit`` this admission matched (None
+        without a prefix cache or on a miss); the engine prefills each
         request and installs it into its slot.
 
         ``chunked`` admits for CHUNKED prefill: the slot starts at
@@ -209,16 +275,33 @@ class PagedScheduler:
         it page by page ahead of the chunk front (``ensure_capacity(slot,
         upto=...)``) and window-reclaims behind it, so a long windowed
         prompt's peak page usage is its resident window, same as the
-        monolithic admission bill."""
-        out: List[Tuple[int, Request, List[Optional[int]]]] = []
+        monolithic admission bill.  With a prefix cache attached, chunked
+        admission first consults the radix tree: a hit starts the slot at
+        ``pos = hit.tokens`` with the shared prefix pages mapped read-only
+        (increffed) into its table -- prefill covers only the unshared
+        suffix."""
+        out: List[Tuple[int, Request, List[Optional[int]], Any]] = []
         for slot, s in enumerate(self.slots):
             if s is not None or not self.pending:
                 continue
             head = self.pending[0]
             live, dead = self._admit_pages(head)
             if chunked:
+                hit = None
+                if self.prefix is not None and head.features and \
+                        "tokens" in head.features:
+                    import numpy as np
+                    hit = self.prefix.admit(
+                        np.asarray(head.features["tokens"]).reshape(-1))
+                if hit is not None:
+                    self.pending.popleft()
+                    self.slots[slot] = SlotState(
+                        rid=head.rid, req=head, pos=hit.tokens,
+                        pages=list(hit.pages))
+                    out.append((slot, head, list(hit.pages), hit))
+                    continue
                 first = min(live, 1)
-                ids = self.pool.alloc(first)
+                ids = self._alloc(first)
                 if ids is None and first:
                     if not any(x is not None for x in self.slots) and not out:
                         raise ValueError(
@@ -229,9 +312,9 @@ class PagedScheduler:
                 self.pending.popleft()
                 self.slots[slot] = SlotState(rid=head.rid, req=head,
                                              pos=0, pages=list(ids or []))
-                out.append((slot, head, list(ids or [])))
+                out.append((slot, head, list(ids or []), None))
                 continue
-            ids = self.pool.alloc(live)
+            ids = self._alloc(live)
             if ids is None:
                 if not any(x is not None for x in self.slots) and not out:
                     raise ValueError(
@@ -244,7 +327,7 @@ class PagedScheduler:
             self.slots[slot] = SlotState(rid=head.rid, req=head,
                                          pos=head.prompt_len,
                                          pages=pages)
-            out.append((slot, head, list(pages)))
+            out.append((slot, head, list(pages), None))
         return out
 
     # -------------------------------------------------------------- growth
@@ -264,7 +347,7 @@ class PagedScheduler:
         while need > len(s.pages) * self.page.page_tokens:
             if len(s.pages) >= self.pages_per_slot:
                 return False
-            ids = self.pool.alloc(1)
+            ids = self._alloc(1)
             if ids is None:
                 return False
             s.pages.extend(ids)

@@ -1,0 +1,343 @@
+"""Cross-request KV reuse: a radix prefix cache over the page pool
+(DESIGN.md §11).
+
+Millions of users share system prompts and few-shot prefixes.  The KV
+entries for a prompt's first ``i`` tokens depend only on those tokens
+(per-token projections + RoPE at absolute positions), so two requests
+that agree on a prefix produce bitwise-identical KV for it -- there is no
+reason to prefill it twice.  This module makes the serving runtime, not
+the caller, decide which prefixes stay resident -- the paper's thesis
+applied ACROSS requests: finished prompt pages are keyed by their token
+content in a radix tree whose nodes hold refcounted pool pages, and
+admission walks the tree so a matching request starts chunked prefill at
+the first unshared token.
+
+  * **Node = one completed page.**  A radix node is keyed by the exact
+    token tuple of one ``page_tokens``-sized block (dict hashing IS the
+    token-prefix hash -- exact, no collision risk); its path from the
+    root spells the full prefix.  Each node holds one reference on its
+    physical page (``PagePool.incref``), so slot tables and the tree
+    share pages safely: ``pool.total_refs == slot refs + tree refs`` is
+    the engine's per-tick ledger.
+  * **Full pages map read-only.**  A hit increfs the matched chain's
+    pages straight into the new slot's page table.  Writes never land
+    there: the suffix starts at or after the shared frontier, and decode
+    positions only grow, so table-scattered KV writes only ever touch the
+    slot's PRIVATE pages (asserted by the engine every chunk/decode).
+  * **Mid-page divergence = copy-on-write.**  When the shared prefix
+    ends inside a page (attention families), the hit allocates a fresh
+    page, the engine device-copies the partially-matching node's page
+    into it, and the slot writes its suffix into the private copy -- only
+    that one page is duplicated.
+  * **Recurrent state snapshots.**  Hybrid-SSM/xLSTM KV is not enough:
+    the recurrent state after token ``i`` must be restored too.  Chunked
+    prefill snapshots each slot's state rows at page boundaries; nodes
+    store the snapshot and hits for these families round DOWN to the
+    deepest node boundary (no mid-page CoW -- there is no state to
+    restore inside a page).
+  * **Plan-consulted eviction.**  A prefix is worth caching iff its
+    pages fit the mesh-level HBM leftover the planner already recorded
+    (``HierarchicalPlan.prefix_budget()``, from
+    ``detail["page_table"]["prefix_budget_bytes"]``).  Inserting past
+    the budget evicts least-recently-used refcount-zero leaves (nodes
+    whose page no slot maps) until the new node fits; pool pressure from
+    live slots evicts the same way first (``PagedScheduler._alloc``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+PyTree = Any
+
+#: Families whose prefix KV is exactly reusable across requests.  Pure
+#: attention families reuse at token granularity (CoW inside a page);
+#: recurrent-state families reuse at page granularity (state snapshots
+#: exist only at page boundaries).  enc_dec is excluded: its decoder
+#: self-KV depends on the encoder output through cross-attention, so
+#: equal decoder prefixes do NOT imply equal KV.  vlm never pages.
+PREFIX_FAMILIES = ("dense", "moe", "hybrid_ssm", "xlstm", "mla_moe")
+
+#: Families that need a state snapshot restored at the hit boundary.
+STATE_FAMILIES = ("hybrid_ssm", "xlstm")
+
+
+@dataclass
+class PrefixHit:
+    """One admission-time match against the radix tree.
+
+    ``tokens`` prompt tokens are already resident (always ``<
+    prompt_len`` -- at least one suffix token remains so the final-token
+    logits are computed, never replayed).  ``pages`` maps the slot's
+    logical pages ``0..len-1``; all but a CoW page are SHARED (increffed)
+    read-only mappings.  ``cow = (src, dst)`` asks the engine to
+    device-copy page ``src`` into the private page ``dst`` (already
+    allocated, last entry of ``pages``) before the suffix chunk runs.
+    ``state`` is the host-side recurrent-state snapshot to restore into
+    the slot's state rows (state families only)."""
+
+    tokens: int
+    pages: List[int] = field(default_factory=list)
+    cow: Optional[Tuple[int, int]] = None
+    state: Optional[PyTree] = None
+
+
+class _Node:
+    __slots__ = ("key", "page", "state", "parent", "children",
+                 "last_used", "cost")
+
+    def __init__(self, key: Tuple[int, ...], page: Optional[int],
+                 state: Optional[PyTree], parent: Optional["_Node"],
+                 cost: int):
+        self.key = key
+        self.page = page                # physical pool page id (or None)
+        self.state = state              # host snapshot after this block
+        self.parent = parent
+        self.children: Dict[Tuple[int, ...], "_Node"] = {}
+        self.last_used = 0
+        self.cost = cost                # logical bytes billed to budget
+
+
+def _state_nbytes(state: Optional[PyTree]) -> int:
+    if state is None:
+        return 0
+    import jax
+
+    return int(sum(np.asarray(a).nbytes for a in jax.tree.leaves(state)))
+
+
+class RadixPrefixCache:
+    """The radix tree + page-sharing policy (pure python, like the
+    scheduler).  One instance persists across ``generate`` calls on the
+    engine's paged session; ``PagedScheduler`` consults it at admission
+    and squeezes it under pool pressure."""
+
+    def __init__(self, page_tokens: int, page_bytes: int,
+                 budget_bytes: int, pool, has_state: bool = False):
+        self.page_tokens = max(1, int(page_tokens))
+        self.page_bytes = max(0, int(page_bytes))   # logical, 0=token-free
+        self.budget_bytes = max(0, int(budget_bytes))
+        self.pool = pool
+        self.has_state = has_state
+        self._root = _Node((), None, None, None, 0)
+        self._nodes: List[_Node] = []           # flat registry (LRU scans)
+        self._clock = 0                         # monotonic LRU clock
+        self.resident_bytes = 0
+        self.n_pages = 0                        # tree-held page references
+        self.hits = 0
+        self.misses = 0
+        self.inserted_nodes = 0
+        self.evicted_nodes = 0
+        self.evicted_pages = 0
+
+    # ----------------------------------------------------------------- LRU
+    def _touch(self, node: _Node) -> None:
+        self._clock += 1
+        node.last_used = self._clock
+
+    # ------------------------------------------------------------ matching
+    def _block(self, tokens: np.ndarray, j: int) -> Tuple[int, ...]:
+        t = self.page_tokens
+        return tuple(int(x) for x in tokens[j * t:(j + 1) * t])
+
+    def _walk(self, tokens: np.ndarray) -> List[_Node]:
+        """The chain of fully-matching page nodes from the root."""
+        chain: List[_Node] = []
+        node = self._root
+        for j in range(len(tokens) // self.page_tokens):
+            child = node.children.get(self._block(tokens, j))
+            if child is None:
+                break
+            chain.append(child)
+            node = child
+        return chain
+
+    def admit(self, tokens: np.ndarray) -> Optional[PrefixHit]:
+        """Match ``tokens`` against the tree and, on a hit, take the page
+        references the new slot will hold: one incref per shared full
+        page, plus one freshly-allocated private page when the prefix
+        ends mid-page (the CoW copy itself is the engine's job -- this
+        layer never touches device memory).  Returns None on a miss."""
+        tokens = np.asarray(tokens).reshape(-1)
+        plen = int(tokens.shape[0])
+        t = self.page_tokens
+        if plen < 2:
+            self.misses += 1
+            return None                   # no room for a suffix token
+        chain = self._walk(tokens)
+        deepest = chain[-1] if chain else self._root
+        # Longest common in-page token run against the next block's
+        # children -- the CoW candidate (attention families only: a
+        # recurrent state cannot be restored mid-page).
+        part_d, part_node = 0, None
+        if not self.has_state:
+            j = len(chain)
+            block = tuple(int(x) for x in tokens[j * t:(j + 1) * t])
+            for key, child in deepest.children.items():
+                d = 0
+                for a, b in zip(key, block):
+                    if a != b:
+                        break
+                    d += 1
+                if d > part_d and child.page is not None:
+                    part_d, part_node = d, child
+        hit = min(len(chain) * t + part_d, plen - 1)
+        full = hit // t
+        if full < len(chain) and not self.has_state:
+            # The whole prompt is cached (the ``plen - 1`` cap bit): the
+            # final partial page CoWs from the next fully-matched node.
+            part_node = chain[full] if chain[full].page is not None else None
+        part_d = hit - full * t
+        if part_d and part_node is None:
+            hit, part_d = full * t, 0     # round down: nothing to CoW from
+        if self.has_state:
+            full = min(full, len(chain))
+            hit, part_d, part_node = full * t, 0, None
+        if hit <= 0:
+            self.misses += 1
+            return None
+        state = chain[full - 1].state if self.has_state and full else None
+        pages: List[int] = []
+        for node in chain[:full]:
+            if node.page is None:
+                break                     # token-free family: no pages
+            self.pool.incref(node.page)
+            pages.append(node.page)
+        cow = None
+        if part_d and part_node is not None:
+            dst = self._alloc_private()
+            if dst is None:
+                hit = full * t            # degrade to the full-page hit
+                if hit <= 0:
+                    self.misses += 1
+                    return None
+            else:
+                cow = (part_node.page, dst)
+                pages.append(dst)
+                self._touch(part_node)
+        for node in chain[:full]:
+            self._touch(node)
+        self.hits += 1
+        return PrefixHit(tokens=hit, pages=pages, cow=cow, state=state)
+
+    def _alloc_private(self) -> Optional[int]:
+        ids = self.pool.alloc(1)
+        if ids is None:
+            self.release_pages(need=1)
+            ids = self.pool.alloc(1)
+        return ids[0] if ids else None
+
+    # ----------------------------------------------------------- insertion
+    def insert(self, tokens: np.ndarray, slot_pages: List[Optional[int]],
+               snaps: Optional[Dict[int, PyTree]] = None) -> int:
+        """Publish a finished prefill's COMPLETED pages into the tree.
+
+        ``slot_pages`` is the slot's logical page table at prefill
+        completion; only the ``prompt_len // page_tokens`` full prompt
+        pages are cacheable (the partial tail page will be decoded into).
+        ``snaps`` maps page-boundary token counts to host state snapshots
+        (state families; a chain stops at the first boundary without
+        one).  Existing nodes are LRU-touched, new nodes incref their
+        page; insertion stops when the budget cannot be made to fit even
+        after evicting every unreferenced leaf.  Returns the number of
+        nodes created."""
+        tokens = np.asarray(tokens).reshape(-1)
+        t = self.page_tokens
+        node = self._root
+        created = 0
+        for j in range(int(tokens.shape[0]) // t):
+            key = self._block(tokens, j)
+            child = node.children.get(key)
+            if child is not None:
+                self._touch(child)
+                node = child
+                continue
+            page = None
+            if self.page_bytes > 0:
+                if j >= len(slot_pages) or slot_pages[j] is None:
+                    break                 # window-reclaimed: chain ends
+                page = slot_pages[j]
+            state = None
+            if self.has_state:
+                state = (snaps or {}).get((j + 1) * t)
+                if state is None:
+                    break                 # no snapshot at this boundary
+            cost = self.page_bytes + _state_nbytes(state)
+            if not self._make_room(cost):
+                break
+            if page is not None:
+                self.pool.incref(page)
+                self.n_pages += 1
+            child = _Node(key, page, state, node, cost)
+            node.children[key] = child
+            self._nodes.append(child)
+            self.resident_bytes += cost
+            self.inserted_nodes += 1
+            created += 1
+            self._touch(child)
+            node = child
+        return created
+
+    # ------------------------------------------------------------ eviction
+    def _evictable(self, node: _Node) -> bool:
+        """Evictable = a leaf no slot references: interior nodes keep
+        their children's prefix valid, and a page some slot still maps
+        (refcount > 1: tree ref + slot refs) is in active use."""
+        return not node.children and (
+            node.page is None or self.pool.refcount(node.page) == 1)
+
+    def _evict_one(self, need_page: bool = False) -> bool:
+        """Drop the least-recently-used evictable leaf (set ``need_page``
+        to only consider page-holding leaves -- pool pressure wants
+        physical pages back, not state bytes)."""
+        best = None
+        for node in self._nodes:
+            if not self._evictable(node):
+                continue
+            if need_page and node.page is None:
+                continue
+            if best is None or node.last_used < best.last_used:
+                best = node
+        if best is None:
+            return False
+        del best.parent.children[best.key]
+        self._nodes.remove(best)
+        if best.page is not None:
+            self.pool.free([best.page])   # decref: tree held rc 1
+            self.n_pages -= 1
+            self.evicted_pages += 1
+        self.resident_bytes -= best.cost
+        self.evicted_nodes += 1
+        return True
+
+    def _make_room(self, cost: int) -> bool:
+        """Evict LRU leaves until ``cost`` more bytes fit the plan's
+        budget.  Repeated leaf eviction IS subtree eviction: an interior
+        node becomes a leaf once its children go."""
+        if cost > self.budget_bytes:
+            return False
+        while self.resident_bytes + cost > self.budget_bytes:
+            if not self._evict_one():
+                return False
+        return True
+
+    def release_pages(self, need: int = 1) -> int:
+        """Pool back-pressure: evict page-holding LRU leaves until the
+        pool can grant ``need`` pages (or nothing evictable remains).
+        Returns the number of pages returned to the free list."""
+        freed = 0
+        while self.pool.free_pages < need:
+            if not self._evict_one(need_page=True):
+                break
+            freed += 1
+        return freed
+
+    def clear(self) -> int:
+        """Evict every evictable node (tests / explicit cache drops)."""
+        n = 0
+        while self._evict_one():
+            n += 1
+        return n

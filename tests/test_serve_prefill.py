@@ -206,7 +206,7 @@ def test_scheduler_page_flow_and_stall_bound(seed, n_slots, page_tokens,
             if sched.slots[i] is None or i in prefills:
                 continue
             grow(i)
-        for slot, req, _pages in sched.admit(chunked=True):
+        for slot, req, _pages, _hit in sched.admit(chunked=True):
             prefills[slot] = 0
         # chunk phase: at most ONE chunk per prefilling slot per tick.
         for slot in sorted(prefills):

@@ -163,7 +163,7 @@ def test_paged_pool_accounting_reconciles(seed, page_tokens, pool_pages):
             rid += 1
         elif op < 0.55:
             try:
-                for slot, req, ids in sched.admit():
+                for slot, req, ids, _hit in sched.admit():
                     assert 0 not in ids       # null page never granted
             except ValueError:
                 sched.pending.popleft()       # genuinely oversized head
