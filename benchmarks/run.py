@@ -750,6 +750,135 @@ def tune_dry() -> list:
     return out
 
 
+def _nocsv(d) -> str:
+    """A dict rendered without commas (the row format's field separator)."""
+    return "/".join(f"{k}:{v}" for k, v in dict(d or {}).items())
+
+
+def _cluster_ab(policy: str, quick: bool) -> dict:
+    """One routed A/B arm: a 2-replica thread-transport cluster under a
+    memory-SKEWED workload -- one long request pins most of replica 0's
+    page pool, then a burst of short requests arrives while it decodes.
+    ``free_pages`` routes the burst around the page-poor replica;
+    ``round_robin`` alternates it into the queue behind the long request.
+    Prefix cache and affinity are OFF so the A/B isolates placement."""
+    import numpy as np
+    from repro.cluster import EngineSpec, ServeCluster
+    from repro.configs import get_model_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve.engine import plan_decode
+
+    cfg = get_model_config("llama3.2-1b").reduced()
+    max_len = 192
+    long_new = 32 if quick else 64
+    spec = EngineSpec(arch="llama3.2-1b", max_new_tokens=long_new,
+                      max_slots=1, max_len=max_len, prefix_cache="off")
+    plan = plan_decode(cfg, make_host_mesh(), max_len=max_len, cluster=2)
+    cluster = ServeCluster.from_plan(plan, spec, transport="thread",
+                                     policy=policy, affinity=False)
+    rng = np.random.default_rng(0)
+
+    def prompt(n, seed):
+        return np.random.default_rng(seed).integers(
+            0, cfg.vocab_size, n, dtype=np.int32).tolist()
+
+    try:
+        # Build + compile both replicas' chunk buckets outside the clock.
+        for rep in cluster.replicas:
+            rep.generate([prompt(96, 10 + rep.replica)], 1).wait(600)
+            rep.generate([prompt(24, 20 + rep.replica)], 1).wait(600)
+        long_cr = cluster.submit(prompt(96, 1), long_new)
+        t0 = time.perf_counter()
+        while long_cr.ttft() is None:       # decoding: its pages are held
+            if long_cr.done() or time.perf_counter() - t0 > 300:
+                break
+            time.sleep(0.005)
+        burst = [cluster.submit(prompt(24, 100 + i), 2) for i in range(4)]
+        for cr in burst:
+            cr.result(timeout=600)
+        long_cr.result(timeout=600)
+        ttfts = [cr.ttft() for cr in burst]
+        return {
+            "policy": policy,
+            "burst_replicas": [cr.replica for cr in burst],
+            "long_replica": long_cr.replica,
+            "mean_ttft": sum(ttfts) / len(ttfts),
+            "max_ttft": max(ttfts),
+        }
+    finally:
+        cluster.close()
+
+
+def cluster_bench(quick: bool) -> list:
+    """--only cluster: free_pages-vs-round_robin TTFT A/B under the
+    memory-skewed workload (DESIGN.md §12) -- the Silva et al. claim,
+    measured: placing by available pool memory instead of work count
+    keeps the short burst's TTFT off the long request's decode tail."""
+    arms = {p: _cluster_ab(p, quick) for p in ("round_robin", "free_pages")}
+    rr, fp = arms["round_robin"], arms["free_pages"]
+    out = []
+    for a in (rr, fp):
+        out.append(
+            f"cluster_ab_{a['policy']},{a['mean_ttft'] * 1e6:.0f},"
+            f"mean_burst_ttft_ms={a['mean_ttft'] * 1e3:.2f};"
+            f"max_burst_ttft_ms={a['max_ttft'] * 1e3:.2f};"
+            f"long_replica={a['long_replica']};"
+            f"burst_replicas={'/'.join(str(r) for r in a['burst_replicas'])}")
+    out.append(
+        f"cluster_ab_summary,0,replicas=2;"
+        f"ttft_rr_ms={rr['mean_ttft'] * 1e3:.2f};"
+        f"ttft_free_pages_ms={fp['mean_ttft'] * 1e3:.2f};"
+        f"speedup={rr['mean_ttft'] / max(fp['mean_ttft'], 1e-9):.2f};"
+        f"free_pages_ttft_lower={fp['mean_ttft'] < rr['mean_ttft']}")
+    return out
+
+
+def cluster_dry() -> list:
+    """--only cluster --dry: the fleet-vs-plan assertions CI gates
+    (``ci/run_tests.sh`` greps ``replicas_match_plan=True`` and
+    ``pool_matches_plan=True``): the cluster stands up exactly the DCN
+    level's np replicas, each replica's pool geometry is the single-host
+    plan's page_table (the DCN level chooses WIDTH, never reshapes the
+    per-replica subtree), and a DCN-bearing plan without ``cluster=``
+    raises the structured ``PlanError``."""
+    from repro.cluster import ServeCluster, StubSpec
+    from repro.configs import get_model_config
+    from repro.hw.tpu import chip_spec
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve.engine import PlanError, plan_decode
+
+    cfg = get_model_config("llama3.2-1b").reduced()
+    mesh = make_host_mesh()
+    spec = chip_spec()
+    plan = plan_decode(cfg, mesh, max_len=256, spec=spec, cluster=2)
+    single = plan_decode(cfg, mesh, max_len=256, spec=spec)
+    dcn = plan.level("DCN")
+    cluster = ServeCluster.from_plan(plan, StubSpec(), transport="thread")
+    try:
+        n = len(cluster.replicas)
+    finally:
+        cluster.close()
+    replicas_match = dcn is not None and n == dcn.np == plan.replicas()
+    pool_match = (dict(plan.page_table() or {})
+                  == dict(single.page_table() or {}))
+    try:
+        plan_decode(cfg, mesh, max_len=256, spec=spec,
+                    hierarchy=spec.hierarchy(mesh_devices=1, hosts=2))
+        guard = False
+    except PlanError:
+        guard = True
+    return [
+        f"cluster_dry_plan,0,dcn_np={dcn.np if dcn else 0};"
+        f"replicas={plan.replicas()};fleet={n};"
+        f"placement={dcn.detail.get('placement') if dcn else None}",
+        f"cluster_dry_pool,0,"
+        f"cluster_page_table={_nocsv(plan.page_table())};"
+        f"single_page_table={_nocsv(single.page_table())}",
+        f"cluster_dry_summary,0,replicas_match_plan={replicas_match};"
+        f"pool_matches_plan={pool_match};dcn_guard_raises={guard}",
+    ]
+
+
 SECTIONS = {
     "table3": table3,
     "table4": table4,
@@ -765,6 +894,7 @@ SECTIONS = {
     "prefill": prefill_bench,
     "prefix": prefix_bench,
     "tune": tune_bench,
+    "cluster": cluster_bench,
 }
 
 
@@ -905,7 +1035,7 @@ def main() -> None:
         # entirely of these runs them in order.
         dry_sections = {"serve": serve_dry, "paged": paged_dry,
                         "prefill": prefill_dry, "prefix": prefix_dry,
-                        "tune": tune_dry}
+                        "tune": tune_dry, "cluster": cluster_dry}
         only = [s.strip() for s in args.only.split(",") if s.strip()]
         if only and all(s in dry_sections for s in only):
             for s in only:

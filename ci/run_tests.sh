@@ -89,11 +89,27 @@ printf '%s\n' "$tune_out"
 printf '%s\n' "$tune_out" | grep -q 'all_candidates_fit_vmem=True' \
     || { echo "FAIL: a swept candidate exceeds the level budget"; exit 1; }
 
+echo "== smoke: cluster fleet (replicas == DCN np, pool == plan) =="
+# Multi-replica serving end to end on every run (DESIGN.md §12): the
+# cluster must stand up exactly the DCN level's np replicas, each
+# replica's pool geometry must be the single-host plan's page_table
+# (the DCN level chooses width, never reshapes the per-replica
+# subtree), and a DCN-bearing plan without cluster= must raise the
+# structured PlanError.
+cluster_out="$(python -m benchmarks.run --only cluster --dry)"
+printf '%s\n' "$cluster_out"
+printf '%s\n' "$cluster_out" | grep -q 'replicas_match_plan=True' \
+    || { echo "FAIL: fleet width does not match the DCN level"; exit 1; }
+printf '%s\n' "$cluster_out" | grep -q 'pool_matches_plan=True' \
+    || { echo "FAIL: per-replica pool differs from the plan page_table"; exit 1; }
+printf '%s\n' "$cluster_out" | grep -q 'dcn_guard_raises=True' \
+    || { echo "FAIL: single-replica DCN guard did not raise PlanError"; exit 1; }
+
 echo "== smoke: BENCH json emitter (schema repro-bench-v1) =="
 # Every benchmark run must be able to write a committable perf artifact:
 # run the cheap dry sections through --json and check the schema keys.
 bench_json="$(mktemp /tmp/bench_ci_XXXX.json)"
-python -m benchmarks.run --dry --only serve,paged,prefill,prefix,tune \
+python -m benchmarks.run --dry --only serve,paged,prefill,prefix,tune,cluster \
     --json "$bench_json" > /dev/null
 python - "$bench_json" <<'EOF'
 import json, sys

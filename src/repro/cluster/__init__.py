@@ -1,0 +1,37 @@
+"""Multi-replica serving over the DCN level (DESIGN.md §12).
+
+The planner's outermost consumer: ``plan_decode(cfg, mesh, cluster=N)``
+grows a DCN level whose realized ``np`` is the fleet width, each replica
+hosts one single-host ``ServeEngine`` (the plan's ICI/VMEM subtree),
+and the router places each request by the memory-aware ``free_pages``
+policy (Silva et al.) with prefix-affinity.  ``disagg`` splits the
+fleet into prefill and decode roles with ring-ordered KV page
+streaming between them; ``http`` is the stdlib streaming front end.
+"""
+
+from repro.cluster.disagg import (DisaggCluster, KVTransfer,
+                                  PageStreamReceiver, export_transfer,
+                                  import_transfer, transfer_order)
+from repro.cluster.http import ClusterServer
+from repro.cluster.router import (POLICIES, ClusterRequest, Router,
+                                  ServeCluster)
+from repro.cluster.worker import (EngineSpec, Replica, ReplicaStats,
+                                  StubSpec)
+
+__all__ = [
+    "POLICIES",
+    "ClusterRequest",
+    "ClusterServer",
+    "DisaggCluster",
+    "EngineSpec",
+    "KVTransfer",
+    "PageStreamReceiver",
+    "Replica",
+    "ReplicaStats",
+    "Router",
+    "ServeCluster",
+    "StubSpec",
+    "export_transfer",
+    "import_transfer",
+    "transfer_order",
+]

@@ -69,12 +69,26 @@ __all__ = [
     "PAGE_LEVEL_NAMES",
     "HierarchicalPlan",
     "LevelPlan",
+    "PlanError",
     "PlanPolicy",
     "Workload",
     "leaf_matmul_plan",
     "plan_run",
     "quantize_divisor",
 ]
+
+
+class PlanError(RuntimeError):
+    """A structurally inadmissible plan for the caller's context (e.g. a
+    decode plan with a DCN level handed to a single-replica engine).
+    Carries the offending level name and the full plan so callers can
+    report or re-plan instead of string-matching an assert message."""
+
+    def __init__(self, message: str, *, level: Optional[str] = None,
+                 plan: Optional["HierarchicalPlan"] = None):
+        super().__init__(message)
+        self.level = level
+        self.plan = plan
 
 #: Interconnect level names: the level *below* holds the copies the search
 #: partitions against (per-host ICI domains under DCN, per-chip HBMs under
@@ -296,6 +310,18 @@ class HierarchicalPlan:
         page = self.page_plan()
         return int(page["page_tokens"]) if page else None
 
+    def replicas(self) -> int:
+        """The DCN level's realized partition count for a decode workload
+        -- the number of serving replicas the fleet stands up (1 when the
+        plan has no DCN level).  ``repro.cluster`` is the consumer: the
+        DCN level places whole replicas (request-level data parallelism,
+        ``detail["placement"] == "replicas"``), so the cluster's width is
+        the planner's outermost decision, not a config file's."""
+        dcn = self.level("DCN")
+        if dcn is None:
+            return 1
+        return int(dcn.detail.get("replicas", dcn.np))
+
     def kv_shard(self) -> int:
         """The KV head sharding degree the innermost mesh level chose for a
         decode workload (1 when no mesh level carries one)."""
@@ -472,6 +498,45 @@ def _plan_mesh_level(level: MemoryLevel, workload: Workload,
     if cap:
         extent = min(extent, max(1, cap))
     phi = make_phi_mesh(overhead=workload.overhead)
+    if workload.kv_heads > 0 and level.name == "DCN":
+        # Decode workload at the DCN level: the placement unit is a whole
+        # REPLICA (request-level data parallelism), not a KV head slice --
+        # heads shard over the ICI below, and DCN's hosts each hold a full
+        # model copy plus one share of the fleet's resident KV stream.
+        # ``state_bytes`` is one replica's shardable KV, so the fleet
+        # demand is ``state * extent``; Algorithm 1 partitions it against
+        # one host's ICI domain, seeded by the caller's requested replica
+        # count (``PlanPolicy.n_workers``) -- memory pressure can only
+        # RAISE the replica count, never shrink it below the request.
+        fleet = [Array1DDistribution(
+            length=max(1, workload.state_bytes) * extent, element_size=1)]
+        if workload.replicated_bytes:
+            fleet.append(ReplicatedDistribution(workload.replicated_bytes))
+        try:
+            np_raw = find_optimal_np(budget, granule, fleet, n_workers, phi,
+                                     max_np=extent)
+            fits = True
+        except NoValidDecomposition:
+            np_raw, fits = extent, False
+        np_q = (quantize_divisor(np_raw, extent, multiple_of=n_workers)
+                if policy.quantize else np_raw)
+        part = sum(phi(granule, d, np_q) for d in fleet)
+        return LevelPlan(
+            level=level.name, kind="mesh", phi="phi_mesh",
+            budget_bytes=budget, granule_bytes=granule,
+            n_workers=max(1, n_workers), extent=extent,
+            np_raw=np_raw, np=np_q, partition_bytes=part, fits=fits,
+            detail={
+                "tcl_level": child.name,
+                "sharded_bytes": workload.state_bytes * extent,
+                "replicated_bytes": workload.replicated_bytes,
+                "shard_bytes": -(-max(1, workload.state_bytes) * extent
+                                 // np_q),
+                "overhead": workload.overhead,
+                "placement": "replicas",
+                "replicas": np_q,
+            },
+        )
     dists: List[Distribution] = [
         Array1DDistribution(length=max(1, workload.state_bytes),
                             element_size=1)
@@ -749,6 +814,12 @@ def plan_run(hierarchy: MemoryLevel, workload: Workload,
             node = _plan_mesh_level(level, workload, policy, np_thread)
             nodes.append(node)
             np_thread = node.np
+            if node.detail.get("placement") == "replicas":
+                # Replica placement partitions REQUESTS across the fleet,
+                # not one request's state: each replica re-runs the inner
+                # walk as a full single-host instance, so the fleet width
+                # must not thread down as the next level's worker count.
+                np_thread = 1
             if "kv_shard" in node.detail:
                 kv_shard = int(node.detail["kv_shard"])
             mesh_budget = node.budget_bytes      # innermost mesh level wins

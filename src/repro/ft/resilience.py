@@ -117,3 +117,9 @@ class StragglerPolicy:
         for straggler, spare in zip(self.stragglers(), spares):
             out[straggler] = spare
         return out
+
+    def forget(self, host: int) -> None:
+        """Drop a host's latency history (cluster router un-drain: a
+        drained replica re-admitted to service must re-earn a straggler
+        verdict from fresh samples, not inherit its pre-drain tail)."""
+        self.history.pop(host, None)

@@ -9,6 +9,17 @@ page-pool engine whenever the decode plan exposes a page level (and the
 family has a per-slot decode path), falling back to cohort batching.
 ``--prefix {off,radix}`` turns on the cross-request radix prefix cache
 (DESIGN.md §11) in the paged engine.
+
+``--cluster N`` serves through ``repro.cluster`` instead of one engine
+(DESIGN.md §12): ``plan_decode(cluster=N)`` grows a DCN level whose
+realized ``np`` is the fleet width, N replica hosts stand up behind a
+router (``--policy {free_pages,least_loaded,round_robin}``), and
+``--serve`` additionally binds the streaming HTTP front end
+(``--port``).  ``--disagg P:D`` splits the fleet into prefill and
+decode roles with ring-ordered KV page streaming between them
+(``--cluster`` total must equal P+D); page transfer needs the prompt to
+span at least one planned page, so at reduced scale pass
+``--vmem_kib 16`` to force a small page.
 """
 
 from __future__ import annotations
@@ -38,6 +49,13 @@ def main(argv=None) -> int:
     batching = overrides.pop("batching", "auto")
     prefill = overrides.pop("prefill", "chunked")
     prefix = overrides.pop("prefix", "off")
+    cluster = int(overrides.pop("cluster", "0"))
+    disagg = overrides.pop("disagg", "")
+    policy = overrides.pop("policy", "free_pages")
+    serve_http = overrides.pop("serve", "0").lower() in ("1", "true", "yes")
+    port = int(overrides.pop("port", "8480"))
+    transport = overrides.pop("transport", "thread")
+    vmem_kib = int(overrides.pop("vmem_kib", "0"))
 
     cfg = get_model_config(arch).reduced()
     sampling = SamplingConfig(kind=kind, temperature=temperature,
@@ -51,6 +69,13 @@ def main(argv=None) -> int:
                          f"got {prefill!r}")
     if prefix not in ("off", "radix"):
         raise SystemExit(f"--prefix must be off|radix, got {prefix!r}")
+    if cluster or disagg:
+        return _main_cluster(
+            arch=arch, cfg=cfg, n_new=n_new, batch=batch,
+            prompt_len=prompt_len, seed=seed, prefix=prefix or "radix",
+            cluster=cluster, disagg=disagg, policy=policy,
+            serve_http=serve_http, port=port, transport=transport,
+            vmem_kib=vmem_kib)
     # "auto" resolves inside ServeEngine against its own decode plan:
     # paged exactly when the plan exposes a page level and the family has
     # a per-slot decode path; ``--batching cohort`` keeps the PR 4 engine
@@ -97,6 +122,99 @@ def main(argv=None) -> int:
               f"resident_pages={m.get('prefix_resident_pages', 0)} "
               f"budget={m.get('prefix_budget_bytes', 0)}B")
     print(f"[serve] sample continuation ids: {outs[0][:8]}")
+    return 0
+
+
+def _main_cluster(*, arch, cfg, n_new, batch, prompt_len, seed, prefix,
+                  cluster, disagg, policy, serve_http, port, transport,
+                  vmem_kib=0) -> int:
+    """``repro-serve --cluster N [--disagg P:D] [--serve]``: the fleet
+    width comes from the plan's DCN level, each replica hosts one
+    single-host ``ServeEngine``, the router places by ``--policy``."""
+    import numpy as np
+
+    from repro.cluster import (ClusterServer, DisaggCluster, EngineSpec,
+                               ServeCluster)
+    from repro.hw.tpu import chip_spec
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve.engine import plan_decode
+
+    if disagg:
+        p, d = (int(x) for x in disagg.split(":"))
+        cluster = cluster or (p + d)
+    chip = (("vmem_bytes", vmem_kib << 10),
+            ("vmem_reserved_bytes", 0)) if vmem_kib else ()
+    # Engines run float32 (EngineSpec), so plan with their KV width --
+    # the guard below compares against the geometry they will realize.
+    plan = plan_decode(cfg, make_host_mesh(),
+                       max_len=prompt_len + n_new + 1, dtype_bytes=4,
+                       spec=chip_spec(**dict(chip)),
+                       cluster=max(1, cluster))
+    dcn = plan.level("DCN")
+    page_tokens = int((plan.page_plan() or {}).get("page_tokens", 0) or 0)
+    if disagg and page_tokens and prompt_len < page_tokens:
+        # Disaggregation streams COMPLETED pages; a prompt inside one
+        # page has nothing to export.  At reduced scale the default
+        # chip's VMEM page covers the whole sequence, so the demo needs
+        # a forced-small page.
+        raise SystemExit(
+            f"--disagg needs the prompt to span >= 1 planned page, but "
+            f"page_tokens={page_tokens} > prompt_len={prompt_len}; "
+            f"raise --prompt_len or shrink the page with --vmem_kib 16")
+    spec = EngineSpec(arch=arch, max_new_tokens=n_new, max_slots=1,
+                      max_len=prompt_len + n_new + 1,
+                      prefix_cache="radix" if prefix == "off" else prefix,
+                      chip=chip)
+    print(f"[cluster] arch={arch} replicas={plan.replicas()} "
+          f"(DCN np={dcn.np if dcn else 1}) policy={policy} "
+          f"transport={transport}"
+          + (f" disagg={disagg}" if disagg else ""))
+    if disagg:
+        front = DisaggCluster.from_plan(plan, spec, split=disagg,
+                                        transport=transport, policy=policy)
+    else:
+        front = ServeCluster.from_plan(plan, spec, transport=transport,
+                                       policy=policy)
+    try:
+        if serve_http:
+            if disagg:
+                raise SystemExit("--serve fronts a ServeCluster; run "
+                                 "--disagg without --serve (the HTTP "
+                                 "front end routes whole requests)")
+            srv = ClusterServer(front, port=port).start()
+            host, bound = srv.address
+            print(f"[cluster] serving on http://{host}:{bound} "
+                  f"(/generate /healthz /stats); ctrl-c to stop")
+            try:
+                srv.serve_forever()
+            except KeyboardInterrupt:
+                pass
+            finally:
+                srv.close()
+            return 0
+        rng = np.random.default_rng(seed)
+        prompts = [rng.integers(0, cfg.vocab_size, prompt_len,
+                                dtype=np.int32).tolist()
+                   for _ in range(batch)]
+        import time as _time
+
+        t0 = _time.perf_counter()
+        if disagg:
+            outs = [front.generate(p, n_new) for p in prompts]
+        else:
+            outs = front.generate(prompts, n_new)
+        dt = _time.perf_counter() - t0
+        n_tok = sum(len(o) for o in outs)
+        for st in front.stats():
+            print(f"[cluster] replica {st.replica} role={st.role} "
+                  f"free_pages={st.free_pages}/{st.pages_total} "
+                  f"slots={st.slots_free}/{st.slots_total} "
+                  f"prefix_nodes={st.prefix_nodes} tokens={st.tokens}")
+        print(f"[cluster] {n_tok} tokens in {dt:.2f}s "
+              f"({n_tok / max(dt, 1e-9):.1f} tok/s)")
+        print(f"[cluster] sample continuation ids: {outs[0][:8]}")
+    finally:
+        front.close()
     return 0
 
 

@@ -9,6 +9,7 @@ lives in ``repro.serve.steps``.
 """
 
 from repro.serve.engine import (  # noqa: F401
+    PlanError,
     ServeEngine,
     ServePolicy,
     plan_decode,
@@ -50,6 +51,7 @@ __all__ = [
     "PagedScheduler",
     "PagedServeSteps",
     "PageSpec",
+    "PlanError",
     "PrefixHit",
     "RadixPrefixCache",
     "Request",

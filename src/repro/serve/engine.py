@@ -39,7 +39,13 @@ from typing import Any, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.plan import HierarchicalPlan, PlanPolicy, Workload, plan_run
+from repro.core.plan import (
+    HierarchicalPlan,
+    PlanError,
+    PlanPolicy,
+    Workload,
+    plan_run,
+)
 from repro.serve.kvcache import (
     PageSpec,
     align_capacity,
@@ -71,6 +77,7 @@ def plan_decode(
     dtype_bytes: int = 2,
     spec=None,
     hierarchy=None,
+    cluster: Optional[int] = None,
 ) -> HierarchicalPlan:
     """``plan_run`` over the decode workload: the serving counterpart of
     ``dist.sharding.mesh_plan``.
@@ -82,6 +89,16 @@ def plan_decode(
     data_n``) and the per-chip weight shard rides along as the replicated
     reserve.  ``max_len`` bounds one sequence's resident tokens (the page
     search domain) and ``batch`` the concurrently resident sequences.
+
+    ``cluster=N`` plans a MULTI-REPLICA fleet: the hierarchy grows a DCN
+    level over N hosts and the requested replica count seeds the
+    outermost search, so the DCN level's realized ``np`` (``replicas()``)
+    is the fleet width ``repro.cluster`` stands up -- memory pressure can
+    raise it, never shrink it.  Without ``cluster``, a plan containing a
+    DCN level is inadmissible: one ``ServeEngine`` cannot realize
+    multi-host placement, so the walk raises a structured ``PlanError``
+    (the old single-replica guarantee, now a typed failure instead of a
+    CI grep).
     """
     sizes = dict(mesh.shape)
     model_n = max(1, sizes.get("model", 1))
@@ -99,8 +116,9 @@ def plan_decode(
         if spec is None:
             from repro.hw.tpu import chip_spec
             spec = chip_spec()
-        hierarchy = spec.hierarchy(mesh_devices=model_n)
-    return plan_run(
+        hierarchy = spec.hierarchy(mesh_devices=model_n,
+                                   hosts=max(1, cluster or 1))
+    plan = plan_run(
         hierarchy,
         Workload(
             state_bytes=max(1, kv_state),
@@ -112,8 +130,16 @@ def plan_decode(
             kv_heads=heads,
             max_tokens=max_len,
         ),
-        PlanPolicy(spec=spec),
+        PlanPolicy(spec=spec, n_workers=max(1, cluster or 1)),
     )
+    if cluster is None and plan.level("DCN") is not None:
+        raise PlanError(
+            "decode plan contains a DCN level but no cluster was "
+            "requested: a single ServeEngine cannot realize multi-host "
+            "placement -- pass cluster=N and serve it with repro.cluster, "
+            "or plan against a single-host hierarchy",
+            level="DCN", plan=plan)
+    return plan
 
 
 # ---------------------------------------------------------------------------
@@ -252,6 +278,10 @@ class ServeEngine:
         self._steps_cache: Dict[Any, ServeSteps] = {}
         self._paged_steps_cache: Dict[Any, Any] = {}
         self._paged_session: Optional[_PagedSession] = None
+        self._live_pool = None          # the CURRENT run's PagePool
+        self._live_sched = None         # ... and PagedScheduler (telemetry)
+        self._stream_cb = None          # per-call on_token callback
+        self._stream_ix: Dict[int, int] = {}    # rid -> index in this call
         self._next_rid = 0
         self.metrics: Dict[str, Any] = {
             "batching": self.batching,
@@ -309,6 +339,67 @@ class ServeEngine:
         budget = int(self.policy.kv_fraction
                      * max(0, hbm_total - weights) / replication)
         return max(self.page.page_bytes, budget)
+
+    # -------------------------------------------------------------- telemetry
+    def stats(self) -> Dict[str, Any]:
+        """One consolidated telemetry dict -- pool, slots, prefix tree --
+        that every consumer (the cluster router, the ``/stats`` endpoint,
+        benchmarks) reads instead of poking ``metrics`` internals.
+
+        Page counts come from the LIVE pool when one exists (mid-generate,
+        or a persistent radix session holding cached prefixes), so a
+        replica's memory pressure is visible from outside while a request
+        is resident; otherwise they fall back to the last run's geometry,
+        then to the plan's ``page_table``."""
+        ptab = dict(self.plan.page_table() or {})
+        pages_total = int(self.metrics.get("pages_total")
+                          or ptab.get("pages_total") or 0)
+        free_pages, used_pages = pages_total, 0
+        slots_total = int(self.policy.max_slots)
+        slots_free = slots_total
+        pool = self._live_pool
+        if pool is not None:
+            pages_total = pool.pages_total - 1      # minus the null page
+            free_pages = pool.free_pages
+            used_pages = pool.used_pages
+        sched = self._live_sched
+        if sched is not None:
+            slots_free = max(0, slots_total - len(sched.active()))
+        out = {
+            "batching": self.batching,
+            "free_pages": int(free_pages),
+            "used_pages": int(used_pages),
+            "pages_total": int(pages_total),
+            "slots_free": slots_free,
+            "slots_total": slots_total,
+            "page_tokens": self.page.page_tokens,
+            "page_bytes": self.page.page_bytes,
+            "kv_shard": self.plan.kv_shard(),
+            "tokens": int(self.metrics.get("tokens", 0)),
+            "decode_steps": int(self.metrics.get("decode_steps", 0)),
+            "prefill_chunks": int(self.metrics.get("prefill_chunks", 0)),
+            "prefix_nodes": 0,
+            "prefix_pages": 0,
+            "prefix_resident_bytes": 0,
+        }
+        sess = self._paged_session
+        if sess is not None and sess.prefix is not None:
+            out["prefix_nodes"] = sess.prefix.n_nodes
+            out["prefix_pages"] = sess.prefix.n_pages
+            out["prefix_resident_bytes"] = sess.prefix.resident_bytes
+        return out
+
+    # -------------------------------------------------------- token streaming
+    def _notify(self, rid: int, tok: Optional[int]) -> None:
+        """Forward one delivered token (or a ``None`` stream reset after a
+        recompute preemption: earlier tokens will re-emit) to the caller's
+        ``on_token(index_in_call, token)`` callback."""
+        cb = self._stream_cb
+        if cb is None:
+            return
+        ix = self._stream_ix.get(rid)
+        if ix is not None:
+            cb(ix, tok)
 
     # --------------------------------------------------------------- requests
     def _normalize_prompt(self, prompt) -> Dict[str, np.ndarray]:
@@ -417,6 +508,7 @@ class ServeEngine:
                 continue
             t = int(toks[slot])
             outputs[r.rid].append(t)
+            self._notify(r.rid, t)
             self.metrics["tokens"] += 1
             if len(outputs[r.rid]) >= r.max_new or \
                     (scfg.eos_id is not None and t == scfg.eos_id):
@@ -462,6 +554,7 @@ class ServeEngine:
             for r in self.scheduler.evict(victim):
                 self.metrics["tokens"] -= len(outputs[r.rid])
                 outputs[r.rid] = []
+                self._notify(r.rid, None)
             del runs[victim]
             self.metrics["evictions"] += 1
         run.cache = grow_cache(self.cfg, run.cache, needed)
@@ -498,6 +591,7 @@ class ServeEngine:
         prompts: Sequence[Any],
         max_new_tokens=None,
         sampling: Optional[SamplingConfig] = None,
+        on_token=None,
     ) -> List[List[int]]:
         """Serve ``prompts`` (token-id sequences, or per-family feature
         dicts without the batch dim), returning each request's generated
@@ -506,6 +600,12 @@ class ServeEngine:
         (prefills) interleave with one decode step per live cohort per
         tick, and the resident KV footprint stays inside the planned
         budget throughout (asserted every tick).
+
+        ``on_token(i, tok)`` streams each delivered token as it is
+        sampled (``i`` = the request's index in this call) -- the HTTP
+        front end's chunked-transfer hook.  A recompute preemption
+        invalidates a request's streamed tokens; the callback receives
+        ``on_token(i, None)`` and the tokens re-emit from scratch.
         """
         scfg = sampling or self.policy.sampling
         max_new = (max_new_tokens if max_new_tokens is not None
@@ -518,9 +618,19 @@ class ServeEngine:
                 f"entries, got {len(max_new)}")
         if not prompts:
             return []
-        if self.batching == "paged":
-            return self._generate_paged(prompts, max_new, scfg)
+        self._stream_cb = on_token
+        try:
+            if self.batching == "paged":
+                return self._generate_paged(prompts, max_new, scfg)
+            return self._generate_cohort(prompts, max_new, scfg)
+        finally:
+            self._stream_cb = None
+            self._stream_ix = {}
+
+    def _generate_cohort(self, prompts: Sequence[Any], max_new: List[int],
+                         scfg: SamplingConfig) -> List[List[int]]:
         reqs = [self._make_request(p, n) for p, n in zip(prompts, max_new)]
+        self._stream_ix = {r.rid: i for i, r in enumerate(reqs)}
         for r in reqs:
             self.scheduler.submit(r)
         outputs: Dict[int, List[int]] = {r.rid: [] for r in reqs}
@@ -648,6 +758,105 @@ class ServeEngine:
                 cache["state"], hit.state)
         return cache
 
+    def _ensure_paged_session(self, n_slots: int, pages_per_slot: int,
+                              pages_total: int, enc_max: int = 0
+                              ) -> _PagedSession:
+        """The persistent radix session (pool + pooled cache + tree) for
+        this geometry, creating or rebuilding it on a geometry change.
+        Factored out of ``_generate_paged`` so the disaggregation import
+        path can materialize the session BEFORE any generate call."""
+        from repro.serve.pages import PagePool, init_paged_cache
+        from repro.serve.prefix import STATE_FAMILIES, RadixPrefixCache
+
+        geo_key = (n_slots, pages_per_slot, pages_total, enc_max)
+        sess = self._paged_session
+        if sess is not None and sess.key == geo_key:
+            return sess
+        pool = PagePool(pages_total)
+        cache = init_paged_cache(self.cfg, self.model, n_slots,
+                                 pages_total, self.page.page_tokens,
+                                 pages_per_slot, self.dtype,
+                                 enc_len=enc_max)
+        budget = self.plan.prefix_budget()
+        if not budget:                    # no page level (xLSTM): fall back
+            budget = self.scheduler.budget_bytes
+        prefix = RadixPrefixCache(
+            self.page.page_tokens, max(0, self.page.page_bytes), budget,
+            pool, has_state=self.cfg.family in STATE_FAMILIES)
+        self._paged_session = _PagedSession(geo_key, pool, cache, prefix)
+        return self._paged_session
+
+    # ------------------------------------------- disaggregation page hooks
+    def export_pages(self, tokens) -> Optional[Dict[str, Any]]:
+        """Serialize the radix-cached KV pages covering ``tokens``' leading
+        page-aligned blocks (prefill-role replicas: run ``generate`` with
+        ``max_new_tokens=1`` first so the prompt's pages are published to
+        the tree).  Returns ``{"tokens", "page_tokens", "pages", "snaps"}``
+        with ``pages`` a list of per-page ``{buffer: np.ndarray}`` dicts in
+        logical order, or None when nothing is cached (prefix cache off,
+        family not prefix-cacheable, or a cold tree)."""
+        from repro.serve.pages import export_pool_pages
+
+        sess = self._paged_session
+        if sess is None or sess.prefix is None:
+            return None
+        toks = np.asarray(tokens, dtype=np.int32).reshape(-1)
+        covered, pids, snaps = sess.prefix.match(toks)
+        if covered <= 0:
+            return None
+        return {
+            "tokens": toks[:covered].tolist(),
+            "page_tokens": int(self.page.page_tokens),
+            "pages": export_pool_pages(sess.cache, pids),
+            "snaps": snaps,
+        }
+
+    def import_pages(self, tokens, payloads, snaps=None,
+                     n_slots: int = 1) -> int:
+        """Install serialized KV pages into THIS engine's pool and radix
+        tree (the foreign-pool import, decode-role replicas): allocate
+        local pages, write the payload buffers, publish the chain so the
+        next ``generate`` sharing the prefix starts at the boundary.
+        Returns the number of prompt tokens now resident locally.
+
+        Requires ``ServePolicy(prefix_cache="radix")`` and a stable pool
+        geometry (``policy.max_len`` bounding every request) -- a later
+        geometry change rebuilds the session and drops imported pages."""
+        from repro.serve.pages import install_pool_pages
+
+        if self.policy.prefix_cache != "radix" or \
+                self.cfg.family not in self._prefix_families():
+            raise PlanError("import_pages needs ServePolicy(prefix_cache="
+                            "'radix') and a prefix-cacheable family")
+        toks = np.asarray(tokens, dtype=np.int32).reshape(-1)
+        req = self._make_request(toks, self.policy.max_new_tokens,
+                                 paged=True)
+        self._next_rid -= 1               # synthetic request: no rid burn
+        pages_per_slot, pages_total = self._paged_geometry([req], n_slots)
+        sess = self._ensure_paged_session(n_slots, pages_per_slot,
+                                          pages_total, 0)
+        pool, prefix = sess.pool, sess.prefix
+        n = len(payloads)
+        if n == 0:
+            return 0
+        pids = pool.alloc(n)
+        if pids is None:
+            prefix.release_pages(need=n)
+            pids = pool.alloc(n)
+        if pids is None:
+            raise RuntimeError(
+                f"page pool ({pool.pages_total - 1} pages) cannot hold a "
+                f"{n}-page import; raise kv_budget_bytes")
+        sess.cache = install_pool_pages(sess.cache, pids, payloads)
+        prefix.insert(toks, list(pids), snaps=dict(snaps or {}))
+        # The tree now holds one reference per inserted page; drop ours
+        # (uninserted tail pages -- budget pressure -- return to the pool).
+        pool.free(pids)
+        # Resident coverage, not nodes created: a re-import of an
+        # already-published prefix is an idempotent success, and tail
+        # pages dropped under budget pressure are not counted.
+        return int(prefix.match(toks)[0])
+
     def _generate_paged(self, prompts: Sequence[Any], max_new: List[int],
                         scfg: SamplingConfig) -> List[List[int]]:
         """Per-slot continuous batching over the global page pool.
@@ -678,6 +887,7 @@ class ServeEngine:
 
         reqs = [self._make_request(p, n, paged=True)
                 for p, n in zip(prompts, max_new)]
+        self._stream_ix = {r.rid: i for i, r in enumerate(reqs)}
         outputs: Dict[int, List[int]] = {r.rid: [] for r in reqs}
         n_slots = self._paged_slots(reqs)
         page = self.page
@@ -686,12 +896,12 @@ class ServeEngine:
         enc_max = max((r.group[1] for r in reqs), default=0)
         prefix_on = (self.policy.prefix_cache == "radix"
                      and self.cfg.family in self._prefix_families())
-        geo_key = (n_slots, pages_per_slot, pages_total, enc_max)
-        sess = self._paged_session if prefix_on else None
-        if sess is not None and sess.key == geo_key:
+        if prefix_on:
             # Cross-call persistence: the pool's refcounts, the cached
             # prefixes' device pages and the radix tree survive between
             # generate() calls as long as the geometry matches.
+            sess = self._ensure_paged_session(n_slots, pages_per_slot,
+                                              pages_total, enc_max)
             pool, cache, prefix = sess.pool, sess.cache, sess.prefix
         else:
             pool = PagePool(pages_total)
@@ -700,22 +910,10 @@ class ServeEngine:
                                      pages_per_slot, self.dtype,
                                      enc_len=enc_max)
             prefix = None
-            if prefix_on:
-                from repro.serve.prefix import (
-                    STATE_FAMILIES,
-                    RadixPrefixCache,
-                )
-
-                budget = self.plan.prefix_budget()
-                if not budget:            # no page level (xLSTM): fall back
-                    budget = self.scheduler.budget_bytes
-                prefix = RadixPrefixCache(
-                    page.page_tokens, max(0, page.page_bytes), budget,
-                    pool, has_state=self.cfg.family in STATE_FAMILIES)
-                self._paged_session = _PagedSession(geo_key, pool, cache,
-                                                    prefix)
         sched = PagedScheduler(pool, page, n_slots, pages_per_slot,
                                window=window, prefix=prefix)
+        self._live_pool = pool          # router/stats() telemetry handles:
+        self._live_sched = sched        # live reads while generate runs
         steps = self._paged_steps(cache, n_slots, pages_total,
                                   pages_per_slot, enc_max)
         self.metrics["pages_total"] = pages_total - 1     # usable pages
@@ -765,6 +963,7 @@ class ServeEngine:
             -- the next admission backfills)."""
             outputs[rid].append(tok)
             token_times[rid].append(time.monotonic())
+            self._notify(rid, tok)
             self.metrics["tokens"] += 1
             next_np[slot, 0] = tok
             if window:
@@ -781,6 +980,7 @@ class ServeEngine:
             self.metrics["tokens"] -= len(outputs[vreq.rid])
             outputs[vreq.rid] = []
             token_times[vreq.rid] = []
+            self._notify(vreq.rid, None)
             requeued.add(vreq.rid)
             prefills.pop(victim, None)
             chunk_snaps.pop(victim, None)

@@ -567,3 +567,62 @@ def paged_cache_logical_axes(cfg: ModelConfig, cache: PyTree) -> PyTree:
             else {}
         axes["state"].update(cross)
     return axes
+
+
+# ---------------------------------------------------------------------------
+# Page serialization (prefill/decode disaggregation, repro.cluster)
+# ---------------------------------------------------------------------------
+
+
+def export_pool_pages(cache: PyTree, page_ids: Sequence[int]) -> List[Dict[str, Any]]:
+    """Serialize physical pool pages as host arrays, one payload per page.
+
+    Each payload maps the pool's buffer names ("k"/"v", or "lat" for MLA)
+    to an ``(L, page_tokens, KV, D)`` numpy array -- the full cross-layer
+    slice of ONE physical page.  This is the wire unit of prefill/decode
+    disaggregation: a prefill replica exports the pages a finished prompt
+    occupies and streams them (in ring order) to a decode replica, which
+    installs them into its own pool under fresh physical ids.  Payloads
+    are keyed by *position in the logical page chain*, never by physical
+    id: physical numbering is private to each replica's pool.
+    """
+    import numpy as np
+
+    payloads: List[Dict[str, Any]] = []
+    for pid in page_ids:
+        payloads.append({name: np.asarray(buf[:, int(pid)])
+                         for name, buf in cache["pool"].items()})
+    return payloads
+
+
+def install_pool_pages(cache: PyTree, page_ids: Sequence[int],
+                       payloads: Sequence[Dict[str, Any]]) -> PyTree:
+    """Install serialized page payloads into this pool's physical pages.
+
+    ``page_ids`` are freshly allocated pages in the *receiving* pool
+    (same length as ``payloads``); the i-th payload lands on the i-th
+    page.  Buffer names and per-page shapes must match the receiving
+    pool's layout -- geometry comes from the same ``HierarchicalPlan``
+    on both sides, so a mismatch means the replicas were planned against
+    different hierarchies and is an error, not a fallback.
+    """
+    import jax.numpy as jnp
+
+    if len(page_ids) != len(payloads):
+        raise ValueError(f"{len(page_ids)} pages for {len(payloads)} payloads")
+    pool = dict(cache["pool"])
+    for name in pool:
+        buf = pool[name]
+        for pid, payload in zip(page_ids, payloads):
+            if name not in payload:
+                raise ValueError(f"payload missing pool buffer {name!r}")
+            data = jnp.asarray(payload[name], buf.dtype)
+            if data.shape != buf.shape[:1] + buf.shape[2:]:
+                raise ValueError(
+                    f"page payload {name!r} shape {data.shape} != pool "
+                    f"page shape {buf.shape[:1] + buf.shape[2:]}")
+            buf = buf.at[:, int(pid)].set(data)
+        pool[name] = buf
+    new_cache = dict(cache)
+    new_cache["pool"] = pool
+    return new_cache

@@ -155,6 +155,39 @@ class RadixPrefixCache:
             node = child
         return chain
 
+    @property
+    def n_nodes(self) -> int:
+        """Resident node count (``engine.stats()`` / router telemetry)."""
+        return len(self._nodes)
+
+    def match(self, tokens: np.ndarray):
+        """Read-only longest page-aligned match -- the disaggregation
+        EXPORT lookup (``ServeEngine.export_pages``): no refcounts move,
+        no CoW page is allocated, matched nodes are only LRU-touched.
+        Returns ``(covered_tokens, page_ids, snaps)`` where ``snaps`` maps
+        page-boundary token counts to host state snapshots (state
+        families; empty otherwise).  A chain stops at the first node
+        without a page (token-free families) or, for state families,
+        without a snapshot -- a partial transfer would be unresumable."""
+        tokens = np.asarray(tokens).reshape(-1)
+        chain = self._walk(tokens)
+        t = self.page_tokens
+        covered = 0
+        pages: List[int] = []
+        snaps: Dict[int, PyTree] = {}
+        for j, node in enumerate(chain):
+            if self.page_bytes > 0 and node.page is None:
+                break
+            if self.has_state and node.state is None:
+                break
+            if node.page is not None:
+                pages.append(node.page)
+            if node.state is not None:
+                snaps[(j + 1) * t] = node.state
+            covered = (j + 1) * t
+            self._touch(node)
+        return covered, pages, snaps
+
     def admit(self, tokens: np.ndarray) -> Optional[PrefixHit]:
         """Match ``tokens`` against the tree and, on a hit, take the page
         references the new slot will hold: one incref per shared full
