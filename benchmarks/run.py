@@ -879,6 +879,127 @@ def cluster_dry() -> list:
     ]
 
 
+def _obs_workload(tracing: bool = True):
+    """The obs section's shared recorded workload: a reduced paged+radix
+    engine over three prompts sharing a 12-token prefix.  Returns the
+    engine (registry populated, tracer holding the request spans)."""
+    import numpy as np
+    from repro.configs import get_model_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve import ServeEngine, ServePolicy
+
+    cfg = get_model_config("llama3.2-1b").reduced()
+    engine = ServeEngine(
+        cfg, make_host_mesh(),
+        policy=ServePolicy(max_new_tokens=6, max_slots=4, max_len=128,
+                           batching="paged", prefix_cache="radix"))
+    engine.tracer.enabled = tracing
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, 256, 12, dtype=np.int32)
+    engine.generate(
+        [np.concatenate([shared,
+                         rng.integers(0, 256, 4 + i, dtype=np.int32)])
+         for i in range(3)])
+    return engine
+
+
+def obs_dry() -> list:
+    """--only obs --dry: the observability spine end to end, no timing.
+
+    Runs the shared workload, exports the tracer's Chrome/Perfetto JSON
+    and validates it against the ``trace_event`` schema
+    (``repro.obs.validate_events``), then walks plan-vs-actual
+    (DESIGN.md §13) asserting every residual is finite and the pool's
+    observed peak landed inside the plan's ``page_table`` budget.  CI
+    greps ``trace_schema_ok=True``, ``plan_vs_actual_ok=True`` and
+    ``pool_peak_within_plan=True`` (``ci/run_tests.sh``).
+    """
+    import json
+    import math
+    import tempfile
+
+    from repro.obs import plan_vs_actual, validate_events
+
+    engine = _obs_workload()
+    with tempfile.NamedTemporaryFile("r", suffix=".json") as tf:
+        engine.tracer.export_chrome(tf.name)
+        doc = json.load(open(tf.name))
+    events = doc.get("traceEvents", [])
+    problems = validate_events(events)
+    names = sorted({e.get("name") for e in events if e.get("ph") != "M"})
+    schema_ok = (not problems and doc.get("displayTimeUnit") == "ms"
+                 and {"request", "prefill_chunk", "decode_tick",
+                      "queue_wait"} <= set(names))
+    rows = plan_vs_actual(engine.plan, engine.obs)
+    out = []
+    finite = bool(rows)
+    pool_ok = False
+    for r in rows:
+        ratio = r["ratio"]
+        finite = finite and ratio is not None and math.isfinite(ratio)
+        if r["metric"] == "pool_pages":
+            pool_ok = bool(r["observed"] is not None and r["predicted"]
+                           and r["observed"] <= r["predicted"])
+        out.append(
+            f"obs_dry_planvsactual_{r['level']}_{r['metric']},0,"
+            f"predicted={r['predicted']};observed={r['observed']};"
+            f"ratio={ratio};unit={r['unit']};"
+            f"within_band={r['within_band']}")
+    out.append(
+        f"obs_dry_summary,0,trace_events={len(events)};"
+        f"trace_problems={len(problems)};"
+        f"trace_schema_ok={schema_ok};plan_vs_actual_ok={finite};"
+        f"pool_peak_within_plan={pool_ok}")
+    return out
+
+
+def obs_bench(quick: bool) -> list:
+    """--only obs: overhead A/B of the observability spine + the latency
+    percentile surface it produces.
+
+    The same workload runs through two identical paged engines, tracer
+    on vs off (the registry stays on both sides -- it IS the metrics
+    spine, there is no without-registry engine anymore), reporting the
+    per-token cost of tracing, the TTFT / inter-token percentiles the
+    log-bucket histograms yield, and the plan-vs-actual residual rows --
+    the committable calibration trajectory (BENCH_10.json)."""
+    from repro.obs import plan_vs_actual
+
+    out = []
+    reps = 1 if quick else 2
+    results = {}
+    _obs_workload()                 # compile warmup outside both arms
+    for tracing in (False, True):
+        best = None
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            engine = _obs_workload(tracing=tracing)
+            dt = time.perf_counter() - t0
+            best = dt if best is None else min(best, dt)
+            results[tracing] = engine
+        n_tok = int(engine.obs.value("tokens", 0))
+        tag = "on" if tracing else "off"
+        out.append(
+            f"obs_ab_trace_{tag},{best / max(1, n_tok) * 1e6:.0f},"
+            f"tokens={n_tok};tok_s={n_tok / max(best, 1e-9):.1f};"
+            f"trace_events={len(engine.tracer.export_events())}")
+    eng = results[True]
+    for hname in ("ttft_s", "inter_token_s", "queue_wait_s"):
+        h = eng.obs.get(hname)
+        out.append(
+            f"obs_latency_{hname},{h.mean * 1e6:.1f},"
+            f"count={h.count};p50_us={h.percentile(50) * 1e6:.1f};"
+            f"p95_us={h.percentile(95) * 1e6:.1f};"
+            f"p99_us={h.percentile(99) * 1e6:.1f}")
+    for r in plan_vs_actual(eng.plan, eng.obs):
+        out.append(
+            f"obs_planvsactual_{r['level']}_{r['metric']},0,"
+            f"predicted={r['predicted']};observed={r['observed']};"
+            f"ratio={r['ratio']};unit={r['unit']};"
+            f"within_band={r['within_band']}")
+    return out
+
+
 SECTIONS = {
     "table3": table3,
     "table4": table4,
@@ -895,6 +1016,7 @@ SECTIONS = {
     "prefix": prefix_bench,
     "tune": tune_bench,
     "cluster": cluster_bench,
+    "obs": obs_bench,
 }
 
 
@@ -1035,7 +1157,8 @@ def main() -> None:
         # entirely of these runs them in order.
         dry_sections = {"serve": serve_dry, "paged": paged_dry,
                         "prefill": prefill_dry, "prefix": prefix_dry,
-                        "tune": tune_dry, "cluster": cluster_dry}
+                        "tune": tune_dry, "cluster": cluster_dry,
+                        "obs": obs_dry}
         only = [s.strip() for s in args.only.split(",") if s.strip()]
         if only and all(s in dry_sections for s in only):
             for s in only:

@@ -105,11 +105,25 @@ printf '%s\n' "$cluster_out" | grep -q 'pool_matches_plan=True' \
 printf '%s\n' "$cluster_out" | grep -q 'dcn_guard_raises=True' \
     || { echo "FAIL: single-replica DCN guard did not raise PlanError"; exit 1; }
 
+echo "== smoke: observability (trace schema + plan-vs-actual) =="
+# The obs spine end to end on every run (DESIGN.md §13): the tracer's
+# Chrome export must validate against the trace_event schema, every
+# plan-vs-actual residual must be finite, and the pool's observed peak
+# must land inside the plan's page_table budget.
+obs_out="$(python -m benchmarks.run --only obs --dry)"
+printf '%s\n' "$obs_out"
+printf '%s\n' "$obs_out" | grep -q 'trace_schema_ok=True' \
+    || { echo "FAIL: Chrome trace export does not validate"; exit 1; }
+printf '%s\n' "$obs_out" | grep -q 'plan_vs_actual_ok=True' \
+    || { echo "FAIL: a plan-vs-actual residual is not finite"; exit 1; }
+printf '%s\n' "$obs_out" | grep -q 'pool_peak_within_plan=True' \
+    || { echo "FAIL: observed pool peak exceeds the planned page_table"; exit 1; }
+
 echo "== smoke: BENCH json emitter (schema repro-bench-v1) =="
 # Every benchmark run must be able to write a committable perf artifact:
 # run the cheap dry sections through --json and check the schema keys.
 bench_json="$(mktemp /tmp/bench_ci_XXXX.json)"
-python -m benchmarks.run --dry --only serve,paged,prefill,prefix,tune,cluster \
+python -m benchmarks.run --dry --only serve,paged,prefill,prefix,tune,cluster,obs \
     --json "$bench_json" > /dev/null
 python - "$bench_json" <<'EOF'
 import json, sys
@@ -123,5 +137,24 @@ assert {"created_unix", "argv", "backend", "device"} <= set(doc)
 print(f"BENCH json OK: {len(doc['rows'])} rows")
 EOF
 rm -f "$bench_json"
+
+echo "== smoke: committed BENCH_10.json (obs trajectory) =="
+# The committed observability benchmark artifact must stay parseable
+# against the same schema so the perf trajectory remains readable.
+python - BENCH_10.json <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+assert doc["schema"] == "repro-bench-v1", doc.get("schema")
+assert {"created_unix", "argv", "backend", "device"} <= set(doc)
+rows = doc["rows"]
+assert rows, "no rows"
+for row in rows:
+    assert set(row) == {"section", "name", "us_per_call", "derived"}, row
+assert any(r["name"].startswith("obs_planvsactual_") for r in rows), \
+    "missing plan-vs-actual rows"
+assert any(r["name"].startswith("obs_ab_trace_") for r in rows), \
+    "missing tracing A/B rows"
+print(f"BENCH_10 OK: {len(rows)} rows")
+EOF
 
 echo "CI OK"

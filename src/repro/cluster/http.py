@@ -11,6 +11,12 @@ the standard library.
   * ``GET /healthz`` -- ``{"ok": true, "replicas": N, "admissible": M}``.
   * ``GET /stats`` -- the router's world view: one ``ReplicaStats`` dict
     per replica plus the active policy.
+  * ``GET /metrics`` -- Prometheus text exposition (DESIGN.md §13): the
+    router's registry plus every replica's forwarded snapshot, labelled
+    ``{replica=...,role=...}``.
+  * ``GET /trace[?n=N]`` -- Chrome/Perfetto ``trace_event`` JSON of the
+    last N events (default: everything the rings hold), router and all
+    replicas merged on one timeline.
 """
 
 from __future__ import annotations
@@ -21,6 +27,7 @@ import threading
 from dataclasses import asdict
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any, Optional, Tuple
+from urllib.parse import parse_qs, urlparse
 
 
 def _make_handler(cluster):
@@ -46,19 +53,43 @@ def _make_handler(cluster):
         def _line(self, obj: Any) -> None:
             self._chunk(json.dumps(obj).encode() + b"\n")
 
+        def _text(self, code: int, text: str,
+                  ctype: str = "text/plain; version=0.0.4") -> None:
+            data = text.encode()
+            self.send_response(code)
+            self.send_header("Content-Type", ctype)
+            self.send_header("Content-Length", str(len(data)))
+            self.end_headers()
+            self.wfile.write(data)
+
         # ---------------------------------------------------------- GETs
         def do_GET(self):                       # noqa: N802
-            if self.path == "/healthz":
+            url = urlparse(self.path)
+            if url.path == "/healthz":
                 stats = cluster.stats()
                 self._json(200, {
                     "ok": True,
                     "replicas": len(stats),
                     "admissible": sum(1 for s in stats if not s.drained),
                 })
-            elif self.path == "/stats":
+            elif url.path == "/stats":
                 self._json(200, {
                     "policy": cluster.router.policy,
                     "replicas": [asdict(s) for s in cluster.stats()],
+                })
+            elif url.path == "/metrics":
+                self._text(200, cluster.prometheus())
+            elif url.path == "/trace":
+                qs = parse_qs(url.query)
+                last = None
+                try:
+                    last = int(qs["n"][0]) if "n" in qs else None
+                except ValueError:
+                    self._json(400, {"error": "n must be an integer"})
+                    return
+                self._json(200, {
+                    "traceEvents": cluster.trace_events(last),
+                    "displayTimeUnit": "ms",
                 })
             else:
                 self._json(404, {"error": f"no route {self.path}"})

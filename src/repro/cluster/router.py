@@ -59,7 +59,7 @@ class Router:
 
     def __init__(self, n: int, policy: str = "free_pages",
                  page_tokens: int = 0, affinity: bool = True,
-                 straggler=None):
+                 straggler=None, obs=None, tracer=None):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
         self.n = n
@@ -70,6 +70,12 @@ class Router:
         self.drained: set = set()
         self._rr = 0
         self._prefix_home: Dict[int, int] = {}
+        # Observability (DESIGN.md §13): placement decisions count into
+        # the registry and land in the trace (the router's tracer uses
+        # its own pid, so a merged cluster trace shows who sent each
+        # request where alongside the replicas serving them).
+        self.obs = obs
+        self.tracer = tracer
 
     # --------------------------------------------------------- placement
     def _prefix_key(self, tokens) -> Optional[int]:
@@ -95,6 +101,7 @@ class Router:
         if key is not None:
             home = self._prefix_home.get(key)
             if home in live:
+                self._record(home, by, affinity=True)
                 return home
         if self.policy == "round_robin":
             pick = live[self._rr % len(live)]
@@ -109,7 +116,20 @@ class Router:
                 by[i].free_pages, -(by[i].queued + by[i].active), -i))
         if key is not None:
             self._prefix_home[key] = pick
+        self._record(pick, by, affinity=False)
         return pick
+
+    def _record(self, pick: int, by, affinity: bool) -> None:
+        if self.obs is not None:
+            self.obs.inc("route_decisions")
+            if affinity:
+                self.obs.inc("route_affinity_hits")
+        if self.tracer is not None:
+            self.tracer.instant(
+                "route",
+                args={"pick": pick, "policy": self.policy,
+                      "affinity": affinity,
+                      "free_pages": by[pick].free_pages})
 
     # ----------------------------------------------------- drain lifecycle
     def drain(self, replica: int) -> None:
@@ -175,11 +195,24 @@ class ServeCluster:
     file's."""
 
     def __init__(self, replicas: List[Replica], router: Router):
+        from repro.obs import Registry, Tracer
+
         self.replicas = replicas
         self.router = router
         self._lock = threading.Lock()
         self._next_rid = 0
         self._inflight: List[ClusterRequest] = []
+        # Front-side observability (DESIGN.md §13): the router records
+        # its placements under its own pid (one past the replica range)
+        # so ``trace_events`` can merge router + every replica onto one
+        # Perfetto timeline.
+        self.obs = Registry()
+        self.tracer = Tracer(pid=len(replicas), process_name="router")
+        self.obs.set("fleet_replicas", len(replicas), unit="replicas")
+        if router.obs is None:
+            router.obs = self.obs
+        if router.tracer is None:
+            router.tracer = self.tracer
 
     @classmethod
     def from_plan(cls, plan, factory, transport: str = "thread",
@@ -237,6 +270,40 @@ class ServeCluster:
         token lists in submission order (the token-identity surface)."""
         crs = [self.submit(p, max_new_tokens) for p in prompts]
         return [cr.result() for cr in crs]
+
+    # ------------------------------------------------------ observability
+    def trace_events(self, last: Optional[int] = None) -> List[Dict]:
+        """The whole fleet's Chrome trace on ONE timeline: the router's
+        placement instants (its own pid) merged with every replica's
+        request spans (pid = replica id), sorted by timestamp."""
+        from repro.obs import merge_events
+
+        lists = [self.tracer.chrome_events(last)]
+        for rep in self.replicas:
+            lists.append(rep.trace(last))
+        return merge_events(*lists)
+
+    def prometheus(self) -> str:
+        """Prometheus text exposition for the fleet: the front's own
+        registry plus every replica's forwarded snapshot and scalar
+        stats, labelled by replica/role."""
+        from dataclasses import asdict
+
+        from repro.obs import prometheus_lines
+
+        lines = [self.obs.to_prometheus(labels={"process": "router"})
+                 .rstrip("\n")]
+        for st in self.stats():
+            labels = {"replica": str(st.replica), "role": st.role}
+            d = asdict(st)
+            snap = d.pop("metrics", {}) or {}
+            d.pop("replica", None)
+            d.pop("role", None)
+            d.pop("batching", None)
+            lines.extend(prometheus_lines(
+                {f"replica_{k}": v for k, v in d.items()}, labels))
+            lines.extend(prometheus_lines(snap, labels))
+        return "\n".join(lines) + "\n"
 
     # -------------------------------------------------------------- drain
     def drain_replica(self, replica: int) -> List[int]:

@@ -31,7 +31,7 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from dataclasses import dataclass, fields, replace
+from dataclasses import dataclass, field, fields, replace
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -73,13 +73,26 @@ class ReplicaStats:
     tokens: int = 0
     ticks: int = 0
     drained: bool = False
+    #: Full registry snapshot (DESIGN.md §13): every counter/gauge plus
+    #: flattened histogram quantiles, forwarded on the existing stats
+    #: tick -- so the router (and ``GET /metrics``) reads the very gauge
+    #: the replica's page pool writes, not a reconstruction.  Stub
+    #: engines (no registry) leave it empty.
+    metrics: Dict[str, Any] = field(default_factory=dict)
 
     @classmethod
     def from_engine(cls, engine, replica: int, role: str = "serve",
                     ticks: int = 0) -> "ReplicaStats":
         s = engine.stats()
         keep = {f.name for f in fields(cls)}
-        return cls(replica=replica, role=role, ticks=ticks,
+        snap: Dict[str, Any] = {}
+        obs = getattr(engine, "obs", None)
+        if obs is not None:
+            try:
+                snap = obs.snapshot()
+            except Exception:                       # noqa: BLE001
+                snap = {}
+        return cls(replica=replica, role=role, ticks=ticks, metrics=snap,
                    **{k: v for k, v in s.items() if k in keep})
 
 
@@ -133,7 +146,8 @@ class EngineSpec:
                     prefix_cache=self.prefix_cache,
                     kv_budget_bytes=self.kv_budget_bytes),
                 seed=self.seed,
-                spec=chip_spec(**dict(self.chip)))
+                spec=chip_spec(**dict(self.chip)),
+                replica=replica)
             _ENGINE_CACHE[key] = eng
         return eng
 
@@ -256,6 +270,10 @@ def _serve_loop(recv: Callable[[], Any], send: Callable[[Any], None],
                 result = engine.import_pages(tokens, payloads, snaps=snaps)
             elif op == "stats":
                 result = engine.stats()
+            elif op == "trace":
+                tracer = getattr(engine, "tracer", None)
+                result = (tracer.chrome_events(payload)
+                          if tracer is not None else [])
             else:
                 raise ValueError(f"unknown op {op!r}")
             send((seq, "ok", result))
@@ -464,6 +482,19 @@ class Replica:
         st.role = self.role
         st.queued, st.active = self._load()
         return st
+
+    def trace(self, last: Optional[int] = None) -> List[Dict[str, Any]]:
+        """This replica's Chrome trace events (pid = replica id).  The
+        thread transport reads the live tracer; the spawn transport
+        round-trips a ``trace`` instruction.  Engines without a tracer
+        (stubs) yield []."""
+        if self.engine is not None:
+            tracer = getattr(self.engine, "tracer", None)
+            return tracer.chrome_events(last) if tracer is not None else []
+        try:
+            return self.submit("trace", last).wait() or []
+        except Exception:                           # noqa: BLE001
+            return []
 
     # -------------------------------------------------------------- drain
     def pending(self) -> List[_Call]:

@@ -56,6 +56,10 @@ def main(argv=None) -> int:
     port = int(overrides.pop("port", "8480"))
     transport = overrides.pop("transport", "thread")
     vmem_kib = int(overrides.pop("vmem_kib", "0"))
+    trace_path = overrides.pop("trace", "")
+    metrics_interval = float(overrides.pop("metrics_interval", "0"))
+    show_stats = overrides.pop("stats", "0").lower() in ("1", "true",
+                                                         "yes")
 
     cfg = get_model_config(arch).reduced()
     sampling = SamplingConfig(kind=kind, temperature=temperature,
@@ -75,7 +79,8 @@ def main(argv=None) -> int:
             prompt_len=prompt_len, seed=seed, prefix=prefix or "radix",
             cluster=cluster, disagg=disagg, policy=policy,
             serve_http=serve_http, port=port, transport=transport,
-            vmem_kib=vmem_kib)
+            vmem_kib=vmem_kib, trace_path=trace_path,
+            show_stats=show_stats)
     # "auto" resolves inside ServeEngine against its own decode plan:
     # paged exactly when the plan exposes a page level and the family has
     # a per-slot decode path; ``--batching cohort`` keeps the PR 4 engine
@@ -94,8 +99,15 @@ def main(argv=None) -> int:
         plen = prompt_len if not mixed else max(8, prompt_len // (1 + i % 2))
         prompts.append(engine_prompt(cfg, plen, rng))
 
+    stop_metrics = None
+    if metrics_interval > 0:
+        stop_metrics = _metrics_ticker(engine.obs, metrics_interval)
     t0 = time.perf_counter()
-    outs = engine.generate(prompts)
+    try:
+        outs = engine.generate(prompts)
+    finally:
+        if stop_metrics is not None:
+            stop_metrics()
     dt = time.perf_counter() - t0
 
     n_tok = sum(len(o) for o in outs)
@@ -122,12 +134,44 @@ def main(argv=None) -> int:
               f"resident_pages={m.get('prefix_resident_pages', 0)} "
               f"budget={m.get('prefix_budget_bytes', 0)}B")
     print(f"[serve] sample continuation ids: {outs[0][:8]}")
+    if trace_path:
+        engine.tracer.export_chrome(trace_path)
+        print(f"[serve] trace: {len(engine.tracer.export_events())} events"
+              f" -> {trace_path} (chrome://tracing / ui.perfetto.dev)")
+    if show_stats:
+        # The registry's formatted snapshot (DESIGN.md §13): sorted
+        # keys, units annotated -- identical shape across cohort, paged
+        # and cluster modes.
+        print("[serve] metrics registry:")
+        print(engine.obs.format_table())
     return 0
+
+
+def _metrics_ticker(registry, interval_s: float):
+    """Print the registry snapshot every ``interval_s`` on a daemon
+    thread (``--metrics-interval``); returns a stop() callable."""
+    import threading
+
+    stop = threading.Event()
+
+    def run():
+        n = 0
+        while not stop.wait(interval_s):
+            n += 1
+            snap = registry.snapshot()
+            keys = ("tokens", "decode_steps", "prefill_chunks",
+                    "free_pages", "used_pages", "evictions", "stalls")
+            line = " ".join(f"{k}={snap[k]}" for k in keys if k in snap)
+            print(f"[metrics t+{n * interval_s:.1f}s] {line}")
+
+    threading.Thread(target=run, name="metrics-ticker",
+                     daemon=True).start()
+    return stop.set
 
 
 def _main_cluster(*, arch, cfg, n_new, batch, prompt_len, seed, prefix,
                   cluster, disagg, policy, serve_http, port, transport,
-                  vmem_kib=0) -> int:
+                  vmem_kib=0, trace_path="", show_stats=False) -> int:
     """``repro-serve --cluster N [--disagg P:D] [--serve]``: the fleet
     width comes from the plan's DCN level, each replica hosts one
     single-host ``ServeEngine``, the router places by ``--policy``."""
@@ -213,6 +257,25 @@ def _main_cluster(*, arch, cfg, n_new, batch, prompt_len, seed, prefix,
         print(f"[cluster] {n_tok} tokens in {dt:.2f}s "
               f"({n_tok / max(dt, 1e-9):.1f} tok/s)")
         print(f"[cluster] sample continuation ids: {outs[0][:8]}")
+        if trace_path and hasattr(front, "trace_events"):
+            from repro.obs import write_chrome
+            evs = front.trace_events()
+            write_chrome(trace_path, evs)
+            pids = sorted({e.get("pid") for e in evs
+                           if e.get("ph") != "M"})
+            print(f"[cluster] trace: {len(evs)} events from pids {pids} "
+                  f"-> {trace_path} (one timeline; pid = replica id, "
+                  f"pid {len(front.replicas)} = router)")
+        if show_stats:
+            for st in front.stats():
+                if not st.metrics:
+                    continue
+                print(f"[cluster] replica {st.replica} metrics registry:")
+                for k in sorted(st.metrics):
+                    v = st.metrics[k]
+                    if isinstance(v, float):
+                        v = f"{v:.6g}"
+                    print(f"  {k} {v}")
     finally:
         front.close()
     return 0

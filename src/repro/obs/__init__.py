@@ -1,0 +1,22 @@
+"""repro.obs -- zero-dependency observability spine (DESIGN.md §13).
+
+``metrics``: typed Counter/Gauge/Histogram in a Registry; MetricsView
+keeps the legacy ``engine.metrics`` dict API alive over it.
+``trace``: span Tracer with Chrome/Perfetto trace_event export and the
+RingLog bounded-list policy.
+``planview``: plan-vs-actual residual report over a HierarchicalPlan.
+"""
+
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsView,
+                               Registry, prometheus_lines)
+from repro.obs.planview import (DEFAULT_BAND, format_report,
+                                plan_vs_actual)
+from repro.obs.trace import (RingLog, Tracer, merge_events,
+                             validate_events, write_chrome)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsView", "Registry",
+    "prometheus_lines",
+    "RingLog", "Tracer", "merge_events", "validate_events", "write_chrome",
+    "DEFAULT_BAND", "format_report", "plan_vs_actual",
+]

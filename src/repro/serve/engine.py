@@ -46,6 +46,7 @@ from repro.core.plan import (
     Workload,
     plan_run,
 )
+from repro.obs import MetricsView, Registry, RingLog, Tracer
 from repro.serve.kvcache import (
     PageSpec,
     align_capacity,
@@ -229,6 +230,14 @@ class _Run:
 class ServeEngine:
     """Plan-driven serving engine (see module docstring)."""
 
+    #: Ring-buffer bounds (DESIGN.md §13): the tracer's event ring, the
+    #: interleave log, and each request's token-time log all cap here --
+    #: overflow drops the oldest entry and counts it (``tracer.dropped``,
+    #: ``interleave_dropped``, ``token_times_dropped``).
+    TRACE_CAPACITY = 65536
+    LOG_CAPACITY = 65536
+    TOKEN_TIMES_CAPACITY = 8192
+
     def __init__(
         self,
         cfg: ModelConfig,
@@ -239,6 +248,7 @@ class ServeEngine:
         seed: int = 0,
         spec=None,
         hierarchy=None,
+        replica: int = 0,
     ):
         import jax
         import jax.numpy as jnp
@@ -283,32 +293,40 @@ class ServeEngine:
         self._stream_cb = None          # per-call on_token callback
         self._stream_ix: Dict[int, int] = {}    # rid -> index in this call
         self._next_rid = 0
-        self.metrics: Dict[str, Any] = {
+        self._t_submit: Dict[int, float] = {}   # rid -> submit monotonic s
+        # The metrics spine (DESIGN.md §13): one typed Registry per
+        # engine, one Tracer per replica (pid = replica id so a merged
+        # cluster trace shows the fleet on one timeline).  The legacy
+        # ``engine.metrics`` dict API lives on as a MetricsView over the
+        # registry -- every pre-existing key keeps its name and meaning,
+        # but counts are now monotonic Counters, peaks are Gauges, and
+        # latency distributions are log-bucket Histograms.
+        self.replica = int(replica)
+        self.obs = Registry()
+        self.tracer = Tracer(capacity=self.TRACE_CAPACITY,
+                             pid=self.replica)
+        o = self.obs
+        for name in ("tokens", "tokens_recomputed", "decode_steps",
+                     "cohorts", "evictions", "slot_steps",
+                     "active_slot_steps", "backfills", "stalls",
+                     "prefill_chunks", "prefill_tokens", "prefix_hits",
+                     "prefix_misses", "prefix_hit_tokens", "pages_saved",
+                     "cow_copies", "prefix_nodes_inserted",
+                     "interleave_dropped", "token_times_dropped"):
+            o.counter(name)
+        o.set("page_tokens", self.page.page_tokens, unit="tokens")
+        o.set("page_bytes", self.page.page_bytes, unit="B")
+        o.set("budget_bytes", self.scheduler.budget_bytes, unit="B")
+        o.set("kv_shard", self.plan.kv_shard())
+        o.histogram("ttft_s", unit="s")
+        o.histogram("inter_token_s", unit="s")
+        o.histogram("queue_wait_s", unit="s")
+        self.metrics: MetricsView = MetricsView(o, objects={
             "batching": self.batching,
-            "page_tokens": self.page.page_tokens,
-            "page_bytes": self.page.page_bytes,
-            "budget_bytes": self.scheduler.budget_bytes,
-            "kv_shard": self.plan.kv_shard(),
             "plan_page_table": dict(self.plan.page_table() or {}),
-            "tokens": 0,
-            "decode_steps": 0,
-            "cohorts": 0,
-            "evictions": 0,
             "capacities": [],
-            "slot_steps": 0,
-            "active_slot_steps": 0,
-            "backfills": 0,
-            "stalls": 0,
-            "prefill_chunks": 0,
-            "prefill_tokens": 0,
             "prefix_cache": policy.prefix_cache,
-            "prefix_hits": 0,
-            "prefix_misses": 0,
-            "prefix_hit_tokens": 0,
-            "pages_saved": 0,
-            "cow_copies": 0,
-            "prefix_nodes_inserted": 0,
-        }
+        })
 
     # ------------------------------------------------------------- plan reads
     def _kv_budget(self) -> int:
@@ -360,8 +378,13 @@ class ServeEngine:
         pool = self._live_pool
         if pool is not None:
             pages_total = pool.pages_total - 1      # minus the null page
-            free_pages = pool.free_pages
-            used_pages = pool.used_pages
+            # The pool publishes occupancy gauges on every alloc/free
+            # (DESIGN.md §13); read those so the router's ``free_pages``
+            # policy and this view observe the same instrument.
+            free_pages = int(self.obs.value("free_pages",
+                                            pool.free_pages))
+            used_pages = int(self.obs.value("used_pages",
+                                            pool.used_pages))
         sched = self._live_sched
         if sched is not None:
             slots_free = max(0, slots_total - len(sched.active()))
@@ -483,7 +506,17 @@ class ServeEngine:
             capacity = prompt_len + max_new + 1
         ss = self._steps(len(reqs), prompt_len, capacity)
         batch = self._stack_features(reqs)
+        for r in reqs:
+            now = time.monotonic()
+            t_sub = self._t_submit.get(r.rid, now)
+            self.tracer.complete("queue_wait", t_sub, now, tid=r.rid + 1,
+                                 args={"rid": r.rid, "cohort": cid})
+            self.obs.observe("queue_wait_s", now - t_sub)
+        tp0 = time.monotonic()
         logits, cache = ss.prefill(self.params, batch)
+        self.tracer.complete("prefill", tp0, time.monotonic(), tid=0,
+                             args={"cohort": cid, "slots": len(reqs),
+                                   "prompt": prompt_len})
         toks = sample(logits, scfg, step_key(scfg, step))
         run = _Run(
             cid=cid, reqs=reqs, steps=ss, cache=cache,
@@ -508,12 +541,22 @@ class ServeEngine:
                 continue
             t = int(toks[slot])
             outputs[r.rid].append(t)
+            now = time.monotonic()
+            if len(outputs[r.rid]) == 1:
+                self.tracer.instant("first_token", tid=r.rid + 1,
+                                    args={"rid": r.rid})
+                self.obs.observe(
+                    "ttft_s", now - self._t_submit.get(r.rid, now))
             self._notify(r.rid, t)
             self.metrics["tokens"] += 1
             if len(outputs[r.rid]) >= r.max_new or \
                     (scfg.eos_id is not None and t == scfg.eos_id):
                 del run.active[r.rid]
                 self.scheduler.finish(run.cid, r.rid)
+                self.tracer.complete(
+                    "request", self._t_submit.get(r.rid, now), now,
+                    tid=r.rid + 1,
+                    args={"rid": r.rid, "tokens": len(outputs[r.rid])})
 
     def _compact(self, run: _Run) -> None:
         """Drop finished slots from the cohort batch: slice the cache (and
@@ -549,10 +592,17 @@ class ServeEngine:
                     f"KV budget {self.scheduler.budget_bytes} cannot hold "
                     f"one growing cohort; raise kv_budget_bytes")
             # Recompute preemption: requeue the victim's unfinished
-            # requests.  Their emitted tokens regenerate from scratch, so
-            # they come off the delivered-token count too.
+            # requests.  ``tokens`` stays a monotonic count of delivered
+            # tokens; the invalidated work moves into the
+            # ``tokens_recomputed`` counter instead of subtracting (a
+            # decrement made the count transiently negative when a
+            # preemption landed before the victim's first token re-emit).
             for r in self.scheduler.evict(victim):
-                self.metrics["tokens"] -= len(outputs[r.rid])
+                self.obs.inc("tokens_recomputed", len(outputs[r.rid]))
+                self.tracer.instant(
+                    "preempt", tid=r.rid + 1,
+                    args={"rid": r.rid, "cohort": victim,
+                          "tokens_lost": len(outputs[r.rid])})
                 outputs[r.rid] = []
                 self._notify(r.rid, None)
             del runs[victim]
@@ -572,8 +622,12 @@ class ServeEngine:
             batch["positions_3d"] = jnp.broadcast_to(
                 run.cache["pos"][None, None, None],
                 (3, len(run.reqs), 1)).astype(jnp.int32)
+        td0 = time.monotonic()
         logits, run.cache = run.steps.decode(self.params, run.cache, batch)
         toks = sample(logits, scfg, step_key(scfg, step))
+        self.tracer.complete("decode_tick", td0, time.monotonic(), tid=0,
+                             args={"cohort": run.cid,
+                                   "active": len(run.active)})
         run.next_tokens = toks[:, None].astype(jnp.int32)
         run.pos += 1
         self.metrics["decode_steps"] += 1
@@ -633,6 +687,10 @@ class ServeEngine:
         self._stream_ix = {r.rid: i for i, r in enumerate(reqs)}
         for r in reqs:
             self.scheduler.submit(r)
+            self._t_submit[r.rid] = time.monotonic()
+            self.tracer.instant("submit", tid=r.rid + 1,
+                                args={"rid": r.rid,
+                                      "prompt": r.prompt_len})
         outputs: Dict[int, List[int]] = {r.rid: [] for r in reqs}
         runs: Dict[int, _Run] = {}
         step = 0
@@ -772,7 +830,7 @@ class ServeEngine:
         sess = self._paged_session
         if sess is not None and sess.key == geo_key:
             return sess
-        pool = PagePool(pages_total)
+        pool = PagePool(pages_total, obs=self.obs, tracer=self.tracer)
         cache = init_paged_cache(self.cfg, self.model, n_slots,
                                  pages_total, self.page.page_tokens,
                                  pages_per_slot, self.dtype,
@@ -782,7 +840,8 @@ class ServeEngine:
             budget = self.scheduler.budget_bytes
         prefix = RadixPrefixCache(
             self.page.page_tokens, max(0, self.page.page_bytes), budget,
-            pool, has_state=self.cfg.family in STATE_FAMILIES)
+            pool, has_state=self.cfg.family in STATE_FAMILIES,
+            obs=self.obs, tracer=self.tracer)
         self._paged_session = _PagedSession(geo_key, pool, cache, prefix)
         return self._paged_session
 
@@ -904,7 +963,7 @@ class ServeEngine:
                                               pages_total, enc_max)
             pool, cache, prefix = sess.pool, sess.cache, sess.prefix
         else:
-            pool = PagePool(pages_total)
+            pool = PagePool(pages_total, obs=self.obs, tracer=self.tracer)
             cache = init_paged_cache(self.cfg, self.model, n_slots,
                                      pages_total, page.page_tokens,
                                      pages_per_slot, self.dtype,
@@ -926,7 +985,7 @@ class ServeEngine:
         chunk_tokens = self.plan.chunk_tokens() or page.page_tokens
         if self.policy.prefill == "monolithic" or chunk_tokens <= 0:
             chunk_tokens = 0                  # whole prompt per chunk
-        trace: List[Any] = []
+        trace = RingLog(maxlen=self.LOG_CAPACITY)
         self.metrics["interleave"] = trace
 
         table_np = np.zeros((n_slots, pages_per_slot), np.int32)
@@ -938,11 +997,16 @@ class ServeEngine:
         chunk_snaps: Dict[int, Dict[int, Any]] = {}  # slot -> {tokens: state}
         peak_pages = 0
         t0 = time.monotonic()
-        token_times: Dict[int, List[float]] = {r.rid: [] for r in reqs}
+        token_times: Dict[int, RingLog] = {
+            r.rid: RingLog(maxlen=self.TOKEN_TIMES_CAPACITY) for r in reqs}
         self.metrics["token_times"] = token_times
         self.metrics["start_time"] = t0
         for r in reqs:
             sched.submit(r)
+            self._t_submit[r.rid] = time.monotonic()
+            self.tracer.instant("submit", tid=r.rid + 1,
+                                args={"rid": r.rid,
+                                      "prompt": r.prompt_len})
         step = 0
 
         def clear_slot(i: int) -> None:
@@ -962,7 +1026,16 @@ class ServeEngine:
             retire the slot when its request is done (pages free at once
             -- the next admission backfills)."""
             outputs[rid].append(tok)
-            token_times[rid].append(time.monotonic())
+            now = time.monotonic()
+            times = token_times[rid]
+            if len(outputs[rid]) == 1:
+                self.tracer.instant("first_token", tid=rid + 1,
+                                    args={"rid": rid, "slot": slot})
+                self.obs.observe(
+                    "ttft_s", now - self._t_submit.get(rid, t0))
+            elif len(times):
+                self.obs.observe("inter_token_s", now - times[-1])
+            times.append(now)
             self._notify(rid, tok)
             self.metrics["tokens"] += 1
             next_np[slot, 0] = tok
@@ -972,14 +1045,26 @@ class ServeEngine:
                     (scfg.eos_id is not None and tok == scfg.eos_id):
                 sched.finish(slot)
                 clear_slot(slot)
+                self.tracer.complete(
+                    "request", self._t_submit.get(rid, t0), now,
+                    tid=rid + 1,
+                    args={"rid": rid, "tokens": len(outputs[rid])})
 
         def preempt(victim: int) -> None:
             """Recompute preemption: the victim's tokens (and any partial
-            prefill) regenerate from scratch after re-admission."""
+            prefill) regenerate from scratch after re-admission.  The
+            delivered-token count stays monotonic -- invalidated tokens
+            move into ``tokens_recomputed`` (subtracting here used to
+            drive ``metrics["tokens"]`` transiently negative until the
+            victim re-emitted)."""
             vreq = sched.evict(victim)
-            self.metrics["tokens"] -= len(outputs[vreq.rid])
+            self.obs.inc("tokens_recomputed", len(outputs[vreq.rid]))
+            self.tracer.instant(
+                "preempt", tid=vreq.rid + 1,
+                args={"rid": vreq.rid, "slot": victim,
+                      "tokens_lost": len(outputs[vreq.rid])})
             outputs[vreq.rid] = []
-            token_times[vreq.rid] = []
+            token_times[vreq.rid].clear()   # keeps its dropped count
             self._notify(vreq.rid, None)
             requeued.add(vreq.rid)
             prefills.pop(victim, None)
@@ -1028,6 +1113,12 @@ class ServeEngine:
             # already in its table: CoW-copy the divergent page, restore
             # the state snapshot, and prefill covers only the suffix.
             for slot, req, pages, hit in sched.admit(chunked=True):
+                now = time.monotonic()
+                t_sub = self._t_submit.get(req.rid, t0)
+                self.tracer.complete("queue_wait", t_sub, now,
+                                     tid=req.rid + 1,
+                                     args={"rid": req.rid, "slot": slot})
+                self.obs.observe("queue_wait_s", now - t_sub)
                 cache = reset_slot(self.cfg, self.model, cache, slot,
                                    cross_kv=self._encode_req(steps, req),
                                    enc_len=req.group[1])
@@ -1044,6 +1135,10 @@ class ServeEngine:
                         hit.tokens // page.page_tokens
                     if hit.cow is not None:
                         self.metrics["cow_copies"] += 1
+                        self.tracer.instant(
+                            "cow_copy", tid=req.rid + 1,
+                            args={"rid": req.rid, "slot": slot,
+                                  "src": hit.cow[0], "dst": hit.cow[1]})
                 elif prefix is not None:
                     self.metrics["prefix_misses"] += 1
                 # A backfill is a NEW request taking a previously used
@@ -1114,9 +1209,15 @@ class ServeEngine:
                 toks = jnp.asarray(
                     np.asarray(req.features["tokens"][done:done + c],
                                np.int32))[None]
+                tc0 = time.monotonic()
                 logits, cache = steps.prefill_chunk(
                     self.params, cache, toks, jnp.int32(done),
                     jnp.int32(slot))
+                self.tracer.complete(
+                    "prefill_chunk", tc0, time.monotonic(),
+                    tid=req.rid + 1,
+                    args={"rid": req.rid, "slot": slot, "done": done,
+                          "tokens": c})
                 self.metrics["prefill_chunks"] += 1
                 self.metrics["prefill_tokens"] += c
                 trace.append(("chunk", slot, done, c))
@@ -1185,6 +1286,7 @@ class ServeEngine:
                     snapshot = jax.tree.map(
                         lambda a: a[:, sl] if a.ndim >= 2 else a[sl],
                         cache["state"])
+                td0 = time.monotonic()
                 logits, cache = steps.decode(
                     self.params, cache, {"tokens": jnp.asarray(next_np)})
                 if snapshot is not None:
@@ -1193,6 +1295,8 @@ class ServeEngine:
                                           if ns.ndim >= 2
                                           else ns.at[sl].set(snap)),
                         cache["state"], snapshot)
+                self.tracer.complete("decode_tick", td0, time.monotonic(),
+                                     tid=0, args={"active": len(active)})
                 trace.append(("decode", tuple(active)))
                 toks = np.asarray(
                     sample(logits, scfg, step_key(scfg, step))).reshape(-1)
@@ -1223,8 +1327,15 @@ class ServeEngine:
 
         self.metrics["peak_resident_bytes"] = peak_pages * page.page_bytes
         self.metrics["peak_pages"] = peak_pages
+        self.obs.set_max("pool_peak_pages", peak_pages, unit="pages")
         self.metrics["pages_allocated"] = pool.pages_allocated
         self.metrics["pages_released"] = pool.pages_released
+        # Ring-buffer drop accounting (satellite of DESIGN.md §13): the
+        # bounded interleave/token-time logs shed oldest entries instead
+        # of growing without limit; surface how many were shed.
+        self.obs.inc("interleave_dropped", trace.dropped)
+        self.obs.inc("token_times_dropped",
+                     sum(t.dropped for t in token_times.values()))
         if prefix is not None:
             seen = prefix.hits + prefix.misses
             self.metrics["prefix_hit_rate"] = \

@@ -80,7 +80,7 @@ class PagePool:
     under sharing and ``assert_reconciled`` pins it after every op.
     """
 
-    def __init__(self, pages_total: int):
+    def __init__(self, pages_total: int, obs=None, tracer=None):
         if pages_total < 2:
             raise ValueError(
                 f"pages_total must be >= 2 (null page + one usable page), "
@@ -91,6 +91,20 @@ class PagePool:
         self._rc = [0] * self.pages_total
         self.pages_allocated = 0
         self.pages_released = 0
+        # Observability hooks (DESIGN.md §13): the pool is the single
+        # writer of the occupancy gauges the engine's stats() view, the
+        # cluster router's ``free_pages`` policy and the plan-vs-actual
+        # report all read; alloc/free land in the trace as instants.
+        self.obs = obs
+        self.tracer = tracer
+        self._publish()
+
+    def _publish(self) -> None:
+        if self.obs is not None:
+            self.obs.set("free_pages", self.free_pages, unit="pages")
+            self.obs.set("used_pages", self.used_pages, unit="pages")
+            self.obs.set_max("pool_peak_pages", self.used_pages,
+                             unit="pages")
 
     @property
     def free_pages(self) -> int:
@@ -118,6 +132,10 @@ class PagePool:
         for i in out:
             self._rc[i] = 1
         self.pages_allocated += n
+        self._publish()
+        if self.tracer is not None:
+            self.tracer.instant("page_alloc",
+                                args={"n": n, "free": self.free_pages})
         return out
 
     def incref(self, pid: int) -> None:
@@ -143,6 +161,11 @@ class PagePool:
             if self._rc[i] == 0:
                 self._free.append(i)
                 self.pages_released += 1
+        self._publish()
+        if self.tracer is not None:
+            self.tracer.instant("page_free",
+                                args={"n": len(ids),
+                                      "free": self.free_pages})
 
     def assert_reconciled(self) -> None:
         """Flow counters vs free list vs refcounts (the property tests'

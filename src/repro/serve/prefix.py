@@ -116,7 +116,8 @@ class RadixPrefixCache:
     and squeezes it under pool pressure."""
 
     def __init__(self, page_tokens: int, page_bytes: int,
-                 budget_bytes: int, pool, has_state: bool = False):
+                 budget_bytes: int, pool, has_state: bool = False,
+                 obs=None, tracer=None):
         self.page_tokens = max(1, int(page_tokens))
         self.page_bytes = max(0, int(page_bytes))   # logical, 0=token-free
         self.budget_bytes = max(0, int(budget_bytes))
@@ -132,6 +133,23 @@ class RadixPrefixCache:
         self.inserted_nodes = 0
         self.evicted_nodes = 0
         self.evicted_pages = 0
+        # Observability hooks (DESIGN.md §13): hit/miss/evict land in
+        # the trace; the resident-bytes gauges feed the plan-vs-actual
+        # row for the mesh-level HBM leftover budgeting this tree.
+        self.obs = obs
+        self.tracer = tracer
+
+    def _publish(self) -> None:
+        if self.obs is not None:
+            self.obs.set("prefix_resident_bytes", self.resident_bytes,
+                         unit="B")
+            self.obs.set_max("prefix_peak_resident_bytes",
+                             self.resident_bytes, unit="B")
+
+    def _record_miss(self) -> None:
+        self.misses += 1
+        if self.tracer is not None:
+            self.tracer.instant("prefix_miss")
 
     # ----------------------------------------------------------------- LRU
     def _touch(self, node: _Node) -> None:
@@ -198,7 +216,7 @@ class RadixPrefixCache:
         plen = int(tokens.shape[0])
         t = self.page_tokens
         if plen < 2:
-            self.misses += 1
+            self._record_miss()
             return None                   # no room for a suffix token
         chain = self._walk(tokens)
         deepest = chain[-1] if chain else self._root
@@ -230,7 +248,7 @@ class RadixPrefixCache:
             full = min(full, len(chain))
             hit, part_d, part_node = full * t, 0, None
         if hit <= 0:
-            self.misses += 1
+            self._record_miss()
             return None
         state = chain[full - 1].state if self.has_state and full else None
         pages: List[int] = []
@@ -245,7 +263,7 @@ class RadixPrefixCache:
             if dst is None:
                 hit = full * t            # degrade to the full-page hit
                 if hit <= 0:
-                    self.misses += 1
+                    self._record_miss()
                     return None
             else:
                 cow = (part_node.page, dst)
@@ -254,6 +272,10 @@ class RadixPrefixCache:
         for node in chain[:full]:
             self._touch(node)
         self.hits += 1
+        if self.tracer is not None:
+            self.tracer.instant("prefix_hit",
+                                args={"tokens": hit,
+                                      "cow": cow is not None})
         return PrefixHit(tokens=hit, pages=pages, cow=cow, state=state)
 
     def _alloc_private(self) -> Optional[int]:
@@ -312,6 +334,7 @@ class RadixPrefixCache:
             created += 1
             self._touch(child)
             node = child
+        self._publish()
         return created
 
     # ------------------------------------------------------------ eviction
@@ -344,6 +367,11 @@ class RadixPrefixCache:
             self.evicted_pages += 1
         self.resident_bytes -= best.cost
         self.evicted_nodes += 1
+        if self.tracer is not None:
+            self.tracer.instant("prefix_evict",
+                                args={"page": best.page,
+                                      "resident": self.resident_bytes})
+        self._publish()
         return True
 
     def _make_room(self, cost: int) -> bool:
